@@ -1,0 +1,46 @@
+"""Paper Fig. 8 — energy / CO2 / cloud cost per request vs batch size."""
+from __future__ import annotations
+
+from repro import hw as hw_lib
+from repro.configs import get_config
+from repro.serving.latency_model import LatencyModel
+
+from benchmarks.common import emit, save_json
+
+MODEL = "gemma2-2b"                 # the ResNet50 analog in our pool
+HW = ("tpu-v5e", "v100", "t4", "p4")
+BATCHES = (1, 4, 16, 64)
+
+
+def run() -> None:
+    cfg = get_config(MODEL)
+    out = {}
+    for hw_name in HW:
+        hwm = hw_lib.HARDWARE[hw_name]
+        lm = LatencyModel(cfg, hw=hwm, chips=1)
+        for b in BATCHES:
+            lat = lm.prefill_latency(b, 128)
+            util = min(lm.flops_per_token * b * 128
+                       / (lat * hwm.peak_flops), 1.0)
+            joules = hw_lib.energy_joules(hwm, lat, util) / b
+            co2 = hw_lib.co2_kg(joules)
+            out[f"{hw_name}/b{b}"] = {
+                "j_per_req": joules, "co2_g_per_req": co2 * 1e3,
+                "latency_s": lat,
+            }
+            emit(f"fig8a.energy.{hw_name}.b{b}", lat * 1e6,
+                 f"J/req={joules:.4f};gCO2/req={co2*1e3:.5f}")
+        # cloud cost per 1k requests, per provider/instance
+        for inst, rate in hw_lib.CLOUD_RATES_USD_PER_HOUR.get(hw_name,
+                                                              {}).items():
+            for b in BATCHES:
+                lat = lm.prefill_latency(b, 128)
+                cost = rate * lat / 3600.0 / b * 1000
+                out[f"{hw_name}/{inst}/b{b}"] = {"usd_per_1k_req": cost}
+                emit(f"fig8b.cloud.{hw_name}.{inst.replace('/','_')}.b{b}",
+                     0.0, f"usd_per_1k_req={cost:.5f}")
+    save_json("fig8_cost", out)
+
+
+if __name__ == "__main__":
+    run()

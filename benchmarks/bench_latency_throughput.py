@@ -1,0 +1,47 @@
+"""Paper Fig. 7 — latency & throughput vs batch size across hardware,
+plus the GPU(TPU)/CPU speedup-under-SLO table."""
+from __future__ import annotations
+
+from repro import hw as hw_lib
+from repro.configs import get_config
+from repro.serving.latency_model import LatencyModel
+
+from benchmarks.common import emit, save_json, timed
+
+MODELS = ("granite-8b", "gemma2-2b")          # BERT-Large / ResNet50 analogs
+HW = ("tpu-v5e", "v100", "t4", "p4", "cpu-xeon")
+BATCHES = (1, 2, 4, 8, 16, 32, 64)
+PROMPT = 128
+
+
+def run() -> None:
+    table = {}
+    for model in MODELS:
+        cfg = get_config(model)
+        for hw_name in HW:
+            lm = LatencyModel(cfg, hw=hw_lib.HARDWARE[hw_name], chips=1)
+            for b in (BATCHES if hw_name != "cpu-xeon" else (1,)):
+                (lat, us) = timed(lm.prefill_latency, b, PROMPT)
+                table[f"{model}/{hw_name}/b{b}"] = {
+                    "latency_s": lat, "throughput_rps": b / lat}
+                emit(f"fig7.latency.{model}.{hw_name}.b{b}", us,
+                     f"latency_ms={lat*1e3:.3f};thr={b/lat:.1f}rps")
+    # speedup under the CPU-latency SLO (paper Fig. 7c)
+    for model in MODELS:
+        cpu = table[f"{model}/cpu-xeon/b1"]["latency_s"]
+        best = {}
+        for hw_name in HW[:-1]:
+            ok = [(b, table[f"{model}/{hw_name}/b{b}"])
+                  for b in BATCHES
+                  if table[f"{model}/{hw_name}/b{b}"]["latency_s"] <= cpu]
+            if ok:
+                b, rec = max(ok, key=lambda kv: kv[1]["throughput_rps"])
+                speedup = rec["throughput_rps"] / (1 / cpu)
+                best[hw_name] = {"batch": b, "speedup": speedup}
+                emit(f"fig7.speedup.{model}.{hw_name}", 0.0,
+                     f"best_batch={b};speedup_vs_cpu={speedup:.1f}x")
+    save_json("fig7_latency_throughput", table)
+
+
+if __name__ == "__main__":
+    run()

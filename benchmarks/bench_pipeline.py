@@ -1,0 +1,51 @@
+"""Paper Fig. 14 — pipeline decomposition: per-stage latency vs batch size,
+end-to-end latency under LAN / WiFi / 4G, and cold-start times."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.serving.batching import make_policy
+from repro.serving.latency_model import NETWORKS, LatencyModel
+from repro.serving.simulator import simulate
+from repro.serving.workload import WorkloadSpec
+
+from benchmarks.common import emit, save_json, timed
+
+MODEL = "gemma2-2b"
+
+
+def run() -> None:
+    cfg = get_config(MODEL)
+    lm = LatencyModel(cfg, chips=4)
+    out = {}
+    # (a) stage decomposition vs batch size
+    for mb in (1, 8, 32):
+        pol = make_policy("tfs", max_batch=mb, timeout_s=0.002)
+        res, us = timed(simulate,
+                        WorkloadSpec(rate=3000, duration_s=3, seed=0),
+                        pol, lm)
+        st = res.stage_means()
+        total = sum(st.values())
+        out[f"stages_b{mb}"] = st
+        emit(f"fig14a.stages.b{mb}", us,
+             ";".join(f"{k}={v/total*100:.0f}%" for k, v in st.items()))
+    # (b) network scenarios
+    for net in ("lan", "wifi", "4g"):
+        res, us = timed(simulate,
+                        WorkloadSpec(rate=50, duration_s=3, seed=1),
+                        make_policy("none"), lm, network=NETWORKS[net])
+        s = res.summary()
+        out[f"net_{net}"] = dict(s, stages=res.stage_means())
+        emit(f"fig14b.e2e.{net}", us, f"p50={s['p50_s']*1e3:.2f}ms")
+    # (c) cold start per model × int8 on/off (the "software" analog)
+    for model in ("whisper-tiny", "gemma2-2b", "granite-8b", "dbrx-132b"):
+        for int8 in (False, True):
+            lmm = LatencyModel(get_config(model), chips=8, int8=int8)
+            cs = lmm.cold_start()
+            out[f"cold_{model}_{'int8' if int8 else 'bf16'}"] = cs
+            emit(f"fig14c.coldstart.{model}.{'int8' if int8 else 'bf16'}",
+                 0.0, f"cold_start_s={cs:.2f}")
+    save_json("fig14_pipeline", out)
+
+
+if __name__ == "__main__":
+    run()

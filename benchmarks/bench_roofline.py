@@ -1,0 +1,62 @@
+"""Paper Fig. 10 — Roofline analysis.
+
+(a) real-world archs: arithmetic intensity + attained FLOP/s per (arch ×
+    shape) from the multi-pod dry-run artifacts (experiments/dryrun/);
+(b) generated canonical models: measured on CPU against the CPU ceiling.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+
+from repro import hw as hw_lib
+from repro.core import generator as gen
+from repro.core.analysis import roofline_point
+from repro.serving.latency_model import MeasuredLatency
+
+from benchmarks.common import emit, save_json
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def run() -> None:
+    out = {"real": {}, "generated": {}}
+    hw = hw_lib.TPU_V5E
+    # (a) real-world models from the dry-run roofline pass
+    for f in sorted(DRYRUN_DIR.glob("*__single.json")):
+        rec = json.loads(f.read_text())
+        r = rec.get("roofline")
+        if not rec.get("ok") or not r:
+            continue
+        intensity = r["flops_per_device"] / max(r["bytes_model_per_device"], 1)
+        attained = r["flops_per_device"] / max(r["step_time_s"], 1e-12)
+        bound = ("memory" if intensity < hw.ridge_intensity() else "compute")
+        out["real"][f"{rec['arch']}/{rec['shape']}"] = {
+            "intensity": intensity, "attained_tflops": attained / 1e12,
+            "roofline_bound": bound, "dominant_term": r["dominant"],
+        }
+        emit(f"fig10a.{rec['arch']}.{rec['shape']}", 0.0,
+             f"AI={intensity:.1f};attained_TF={attained/1e12:.2f};{bound}")
+    # (b) generated models, measured (CPU ceiling)
+    for family in ("fc", "transformer"):
+        for W in (128, 512):
+            for b in (1, 16):
+                spec = gen.GeneratedSpec(family=family, layers=4, width=W,
+                                         batch=b, seq=32)
+                params, fn, inputs = gen.build(spec)
+                lat = MeasuredLatency(jax.jit(fn), warmup=1, iters=3
+                                      ).measure(params, *inputs)
+                flops = b * gen.flops_estimate(spec)
+                bytes_moved = gen.param_bytes(params)
+                pt = roofline_point(flops, bytes_moved, lat)
+                out["generated"][spec.name + f"/b{b}"] = pt
+                emit(f"fig10b.{family}.W{W}.b{b}", lat * 1e6,
+                     f"AI={pt['intensity']:.1f};"
+                     f"attained_GF={pt['attained_flops']/1e9:.2f}")
+    save_json("fig10_roofline", out)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Fig. 9 — hyper-parameter sensitivity heat maps over *generated*
+canonical models, measured for real on CPU (layers × width → latency &
+utilization-proxy)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import generator as gen
+from repro.core.analysis import heatmap, render_heatmap
+from repro.core.perfdb import PerfDB
+from repro.serving.latency_model import MeasuredLatency
+
+from benchmarks.common import emit, save_json
+
+LAYERS = (2, 4, 8)
+WIDTHS = (128, 256, 512)
+FAMILIES = ("fc", "transformer")     # the paper's CNN/Transformer pair analog
+
+
+def run() -> None:
+    db = PerfDB()
+    for family in FAMILIES:
+        for L in LAYERS:
+            for W in WIDTHS:
+                spec = gen.GeneratedSpec(family=family, layers=L, width=W,
+                                         batch=4, seq=32)
+                params, fn, inputs = gen.build(spec)
+                lat = MeasuredLatency(jax.jit(fn), warmup=1, iters=3
+                                      ).measure(params, *inputs)
+                flops = spec.batch * gen.flops_estimate(spec)
+                db.insert({
+                    "generated": {"family": family, "layers": L, "width": W},
+                    "result": {"latency_s": lat,
+                               "attained_gflops": flops / lat / 1e9},
+                })
+                emit(f"fig9.{family}.L{L}.W{W}", lat * 1e6,
+                     f"gflops={flops/lat/1e9:.2f}")
+    maps = {}
+    for family in FAMILIES:
+        for value in ("result.latency_s", "result.attained_gflops"):
+            hm = heatmap(db, row_key="generated.layers",
+                         col_key="generated.width", value_key=value,
+                         **{"generated.family": family})
+            maps[f"{family}/{value}"] = hm
+            print(render_heatmap(hm))
+    save_json("fig9_sensitivity", maps)
+
+
+if __name__ == "__main__":
+    run()

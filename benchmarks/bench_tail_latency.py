@@ -1,0 +1,68 @@
+"""Paper Fig. 11 + Fig. 13 — tail latency vs batch size / arrival rate /
+serving software, and utilization under varied workloads."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.serving.batching import make_policy
+from repro.serving.latency_model import LatencyModel
+from repro.serving.simulator import simulate
+from repro.serving.workload import WorkloadSpec
+
+from benchmarks.common import emit, save_json, timed
+
+MODEL = "gemma2-2b"
+CHIPS = 4
+
+
+def run() -> None:
+    cfg = get_config(MODEL)
+    lm = LatencyModel(cfg, chips=CHIPS)
+    out = {}
+    # (a) batch size vs tail, fixed rate
+    for mb in (1, 8, 32):
+        pol = make_policy("tfs", max_batch=mb, timeout_s=0.004)
+        res, us = timed(simulate,
+                        WorkloadSpec(rate=2000, duration_s=5, seed=0),
+                        pol, lm)
+        s = res.summary()
+        out[f"batch{mb}"] = s
+        emit(f"fig11a.tfs.batch{mb}", us,
+             f"p50={s['p50_s']*1e3:.2f}ms;p99={s['p99_s']*1e3:.2f}ms")
+    # (b,c) arrival-rate sweep
+    for rate in (500, 2000, 8000, 16000):
+        pol = make_policy("tfs", max_batch=8, timeout_s=0.004)
+        res, us = timed(simulate,
+                        WorkloadSpec(rate=rate, duration_s=4, seed=1),
+                        pol, lm)
+        s = res.summary()
+        out[f"rate{rate}"] = s
+        emit(f"fig11bc.rate{rate}", us,
+             f"p99={s['p99_s']*1e3:.2f}ms;util={s['utilization']:.2f}")
+    # (d) software comparison at one rate
+    for name, pol in [
+            ("none", make_policy("none")),
+            ("tfs", make_policy("tfs", max_batch=8, timeout_s=0.004)),
+            ("tris", make_policy("tris", preferred=(8, 4, 2, 1)))]:
+        res, us = timed(simulate,
+                        WorkloadSpec(rate=4000, duration_s=4, seed=2),
+                        pol, lm)
+        s = res.summary()
+        xs, qs = res.cdf(points=20)
+        out[f"sw_{name}"] = dict(s, cdf_x=xs, cdf_q=qs)
+        emit(f"fig11d.{name}", us,
+             f"p50={s['p50_s']*1e3:.2f}ms;p99={s['p99_s']*1e3:.2f}ms")
+    # Fig 13 — utilization under light vs heavy workloads, two models
+    for model, rate in (("granite-8b", 30), ("gemma2-2b", 160)):
+        lmm = LatencyModel(get_config(model), chips=CHIPS)
+        res, us = timed(simulate,
+                        WorkloadSpec(rate=rate, duration_s=4, seed=3),
+                        make_policy("none"), lmm)
+        s = res.summary()
+        out[f"util_{model}"] = s
+        emit(f"fig13.util.{model}.rate{rate}", us,
+             f"util={s['utilization']:.3f}")
+    save_json("fig11_tail_latency", out)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit) and
+writes JSON artifacts to experiments/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_cost, bench_dynamic_batching,
+                            bench_kernels, bench_latency_throughput,
+                            bench_pipeline, bench_roofline,
+                            bench_scheduler, bench_sensitivity,
+                            bench_tail_latency)
+    suites = [
+        ("fig7_latency_throughput", bench_latency_throughput.run),
+        ("fig8_cost", bench_cost.run),
+        ("fig9_sensitivity", bench_sensitivity.run),
+        ("fig10_roofline", bench_roofline.run),
+        ("fig11_tail_latency", bench_tail_latency.run),
+        ("fig12_dynamic_batching", bench_dynamic_batching.run),
+        ("fig14_pipeline", bench_pipeline.run),
+        ("fig15_scheduler", bench_scheduler.run),
+        ("kernels_micro", bench_kernels.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        fn()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

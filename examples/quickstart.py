@@ -1,0 +1,38 @@
+"""Quickstart: the paper's end-to-end workflow in ~20 lines.
+
+Submit a benchmark sweep (a "few-lines config"), let the leader schedule it
+across followers, and read the analysis: leaderboard + top-3 configs under
+an SLO.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import BenchmarkJobSpec, Leader, ModelRef, SweepSpec
+from repro.core.analysis import leaderboard, recommend
+from repro.serving.workload import WorkloadSpec
+
+leader = Leader(n_workers=4, lb="qa", order="sjf")
+
+base = BenchmarkJobSpec(
+    job_id="quickstart",
+    model=ModelRef(name="gemma2-2b"),
+    chips=8,
+    slo_latency_s=0.05,
+    workload=WorkloadSpec(rate=500, duration_s=5, prompt_tokens=128),
+)
+sweep = SweepSpec(base, axes={
+    "software.policy": ["none", "tfs", "tris"],
+    "chips": [4, 8, 16],
+    "network": ["lan", "4g"],
+})
+for spec in sweep.expand():
+    leader.submit(spec)
+
+records = leader.run_all()
+print(f"\nexecuted {len(records)} benchmark jobs\n")
+print(leaderboard(leader.db, sort_by="throughput_rps", limit=8))
+
+print("\ntop-3 configurations under a 50 ms p99 SLO (cheapest first):")
+for r in recommend(leader.db, slo_latency_s=0.05):
+    print(f"  {r['job_id']:16s} policy={r['policy']:5s} chips={r['chips']:3d} "
+          f"p99={r['result']['p99_s']*1e3:6.2f}ms "
+          f"${r['result']['cost_per_1k_req']:.4f}/1k-req")

@@ -1,0 +1,34 @@
+"""Roofline report: read the dry-run artifacts and print, per cell, the
+three roofline terms, the dominant bottleneck and the MFU — the Fig. 10
+analysis promoted to the multi-pod engine.
+
+    PYTHONPATH=src python examples/roofline_report.py [dryrun_v2]
+"""
+import json
+import sys
+from pathlib import Path
+
+root = Path(__file__).resolve().parent.parent / "experiments"
+which = sys.argv[1] if len(sys.argv) > 1 else "dryrun_v2"
+
+print(f"{'arch':22s} {'shape':12s} {'dominant':11s} {'step_s':>9s} "
+      f"{'compute_s':>10s} {'memory_s':>9s} {'coll_s':>9s} {'MFU':>6s}")
+rows = []
+for f in sorted((root / which).glob("*__single.json")):
+    rec = json.loads(f.read_text())
+    if rec.get("skipped") or not rec.get("ok") or "roofline" not in rec:
+        continue
+    r = rec["roofline"]
+    rows.append((rec["arch"], rec["shape"], r))
+for arch, shape, r in sorted(rows, key=lambda t: -t[2]["step_time_s"]):
+    print(f"{arch:22s} {shape:12s} {r['dominant']:11s} "
+          f"{r['step_time_s']:9.4f} {r['compute_s']:10.4f} "
+          f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+          f"{r['model_flops_util']:6.3f}")
+
+doms = [r["dominant"] for _, _, r in rows]
+print(f"\n{len(rows)} cells: "
+      + ", ".join(f"{d}-bound: {doms.count(d)}" for d in
+                  ("collective", "memory", "compute")))
+print("per-cell optimized variants (rule sets): see EXPERIMENTS.md §Perf "
+      "and experiments/hillclimb/")

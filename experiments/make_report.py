@@ -1,0 +1,96 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from artifacts.
+
+Baseline (v1) collective terms are post-corrected: the v1 parser counted
+all-reduce at 1× result bytes; the effective-traffic model is 2× (ring),
+so v1 collective bytes gain one extra all-reduce share.
+
+    PYTHONPATH=src python experiments/make_report.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent
+HW_PEAK, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def corrected_terms(rec, v1: bool):
+    r = rec["roofline"]
+    coll = r["collective_bytes_per_device"]
+    if v1:
+        coll += r["collectives"].get("all-reduce", {}).get("bytes", 0)
+    coll_s = coll / LINK_BW
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": coll_s}
+    dom = max(terms, key=terms.get)
+    step = max(terms.values())
+    mfu = r["model_flops"] / (r["chips"] * HW_PEAK * step)
+    return dict(r, collective_s=coll_s, dominant=dom, step_time_s=step,
+                model_flops_util=mfu)
+
+
+def table(dirname: str, mesh: str, v1: bool) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | useful | MFU | peak GB/dev | compile s |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for f in sorted((ROOT / dirname).glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skipped (needs sub-quadratic attn) | — | — | — | — |")
+            continue
+        if not rec.get("ok"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | FAILED ||||||||")
+            continue
+        if "roofline" not in rec:
+            rows.append(f"| {rec['arch']} | {rec['shape']} | compile-only "
+                        f"||||||| {rec.get('compile_s','—')} |")
+            continue
+        r = corrected_terms(rec, v1)
+        peak = rec["memory"]["peak_bytes"] / 2 ** 30
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['model_flops_util']:.3f} | {peak:.2f} | "
+            f"{rec.get('compile_s', 0):.1f} |")
+    return "\n".join(rows)
+
+
+def compile_proof_table(dirname: str) -> str:
+    rows = ["| arch | shape | 16×16 | 2×16×16 | peak GB/dev (single) |",
+            "|---|---|---|---|---|"]
+    by_key = {}
+    for f in sorted((ROOT / dirname).glob("*.json")):
+        if f.stem.count("__") != 2:
+            continue
+        rec = json.loads(f.read_text())
+        key = (rec["arch"], rec["shape"])
+        by_key.setdefault(key, {})[rec["mesh"]] = rec
+    for (arch, shape), recs in sorted(by_key.items()):
+        s = recs.get("16x16", {})
+        m = recs.get("2x16x16", {})
+        def mark(r):
+            if r.get("skipped"):
+                return "skip"
+            return "✓" if r.get("ok") else "✗"
+        peak = (s.get("memory", {}).get("peak_bytes", 0) / 2 ** 30
+                if s.get("ok") and not s.get("skipped") else 0)
+        rows.append(f"| {arch} | {shape} | {mark(s)} | {mark(m)} | "
+                    f"{peak:.2f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "proof"):
+        print("### compile proof (both meshes)\n")
+        print(compile_proof_table("dryrun"))
+    if which in ("all", "v1"):
+        print("\n### baseline roofline (single pod, paper-faithful rules)\n")
+        print(table("dryrun", "single", v1=True))
+    if which in ("all", "v2"):
+        print("\n### optimized-defaults roofline (single pod)\n")
+        print(table("dryrun_v2", "single", v1=False))

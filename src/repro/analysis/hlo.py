@@ -1,0 +1,90 @@
+"""Post-SPMD HLO inspection: collective-traffic accounting.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we parse the
+partitioned HLO text and sum the operand sizes of every communication op.
+The module text is the *per-device* program, so the sums are per-device
+bytes moved over the interconnect.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterable, Tuple
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# shapes like  bf16[256,1024]{1,0}  or  f32[] — capture dtype + dims
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[\w\[\]{},. ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\s*\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[\d+,(\d+)\]")
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-device *effective* interconnect bytes of every collective, by kind.
+
+    Effective-traffic model (ring algorithms, n = group size):
+      all-gather          ≈ result bytes        (each device receives n−1 shards)
+      all-reduce          ≈ 2 × result bytes    (reduce-scatter + all-gather)
+      reduce-scatter      ≈ result bytes × n    (full operand streams through)
+      all-to-all          ≈ result bytes        (sends/receives (n−1)/n of it)
+      collective-permute  ≈ result bytes
+    Result shapes are parsed from the op line (compiled HLO references
+    operands by name only).
+    """
+    out: Dict[str, Dict[str, float]] = {
+        k: {"bytes": 0, "count": 0} for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done" in line.split("=")[1][:60]:
+            continue  # -done consumes the -start token; avoid double count
+        rhs = line.split("=", 1)[1]
+        result_part = rhs.split(kind, 1)[0]
+        total = 0
+        if result_part.strip().startswith("("):   # tuple result: sum elements
+            for sm in _SHAPE_RE.finditer(result_part):
+                total += _shape_bytes(sm.group(1), sm.group(2))
+        else:
+            rm = _SHAPE_RE.search(result_part)
+            if rm:
+                total = _shape_bytes(rm.group(1), rm.group(2))
+        if kind == "all-reduce":
+            total *= 2
+        elif kind == "reduce-scatter":
+            gm = _GROUPS_RE.search(line)
+            total *= int(gm.group(1)) if gm else 2
+        out[kind]["bytes"] += total
+        out[kind]["count"] += 1
+    return out
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in parse_collectives(hlo_text).values()))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\b", hlo_text))

@@ -1,0 +1,4 @@
+from repro.configs.catalog import ARCHS, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+
+__all__ = ["ARCHS", "get_config", "SHAPES", "ShapeSpec", "applicable"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see repro.configs.catalog for the table)."""
+from repro.configs.catalog import RWKV6_7B as CONFIG
+
+__all__ = ["CONFIG"]

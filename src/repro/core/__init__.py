@@ -1,0 +1,8 @@
+from repro.core.leader import Leader, execute_job
+from repro.core.perfdb import PerfDB
+from repro.core.scheduler import ClusterScheduler, evaluate_schedulers
+from repro.core.spec import BenchmarkJobSpec, ModelRef, SoftwareSpec, SweepSpec
+
+__all__ = ["Leader", "execute_job", "PerfDB", "ClusterScheduler",
+           "evaluate_schedulers", "BenchmarkJobSpec", "ModelRef",
+           "SoftwareSpec", "SweepSpec"]

@@ -1,0 +1,103 @@
+"""Analysis stage (paper §4.2.5 + §4.3.1): aggregator, CDF, heat maps,
+roofline points, configuration recommender, leaderboard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro import hw as hw_lib
+from repro.core.perfdb import PerfDB
+
+
+# ---- CDF (Fig. 11) ---------------------------------------------------------
+def cdf(values: Sequence[float], points: int = 100) -> Tuple[List[float], List[float]]:
+    v = np.sort(np.asarray(values, dtype=float))
+    if len(v) == 0:
+        return [], []
+    qs = np.linspace(0, 1, points)
+    return list(np.quantile(v, qs)), list(qs)
+
+
+# ---- heat maps (Fig. 9) ----------------------------------------------------
+def heatmap(db: PerfDB, *, row_key: str, col_key: str, value_key: str,
+            **filters) -> Dict[str, Any]:
+    """Pivot PerfDB records into a (rows × cols) matrix of means."""
+    recs = db.query(**filters)
+    def get(rec, key):
+        node = rec
+        for p in key.split("."):
+            node = node.get(p) if isinstance(node, dict) else None
+            if node is None:
+                return None
+        return node
+    rows = sorted({get(r, row_key) for r in recs} - {None})
+    cols = sorted({get(r, col_key) for r in recs} - {None})
+    mat = np.full((len(rows), len(cols)), np.nan)
+    for r in recs:
+        rv, cv, val = get(r, row_key), get(r, col_key), get(r, value_key)
+        if rv is None or cv is None or val is None:
+            continue
+        i, j = rows.index(rv), cols.index(cv)
+        mat[i, j] = val if np.isnan(mat[i, j]) else (mat[i, j] + val) / 2
+    return {"rows": rows, "cols": cols, "matrix": mat.tolist(),
+            "row_key": row_key, "col_key": col_key, "value_key": value_key}
+
+
+def render_heatmap(hm: Dict[str, Any], fmt: str = "{:7.3f}") -> str:
+    lines = [f"heatmap: {hm['value_key']}  (rows={hm['row_key']}, "
+             f"cols={hm['col_key']})"]
+    header = " " * 10 + "".join(f"{c!s:>10}" for c in hm["cols"])
+    lines.append(header)
+    for rname, row in zip(hm["rows"], hm["matrix"]):
+        cells = "".join(f"{fmt.format(v) if v == v else '      -':>10}"
+                        for v in row)
+        lines.append(f"{rname!s:>10}{cells}")
+    return "\n".join(lines)
+
+
+# ---- roofline points (Fig. 10) ---------------------------------------------
+def roofline_point(flops: float, bytes_moved: float,
+                   runtime_s: float) -> Dict[str, float]:
+    """(arithmetic intensity, attained FLOP/s) for one measured run."""
+    return {
+        "intensity": flops / max(bytes_moved, 1.0),
+        "attained_flops": flops / max(runtime_s, 1e-12),
+    }
+
+
+def roofline_ceiling(hw: hw_lib.HardwareModel,
+                     intensities: Sequence[float]) -> List[float]:
+    return [hw.attainable_flops(i) for i in intensities]
+
+
+# ---- recommender (paper's utility function) --------------------------------
+def recommend(db: PerfDB, *, slo_latency_s: float, metric: str = "p99_s",
+              objective: str = "cost_per_1k_req", top: int = 3,
+              **filters) -> List[Dict[str, Any]]:
+    """Top-k configurations meeting the latency SLO at minimum objective."""
+    recs = [r for r in db.query(**filters)
+            if r.get("result", {}).get(metric) is not None
+            and r["result"][metric] <= slo_latency_s]
+    recs.sort(key=lambda r: r["result"].get(objective, float("inf")))
+    return recs[:top]
+
+
+# ---- leaderboard ------------------------------------------------------------
+def leaderboard(db: PerfDB, *, sort_by: str = "throughput_rps",
+                ascending: bool = False, limit: int = 20,
+                **filters) -> str:
+    recs = [r for r in db.query(**filters) if "result" in r]
+    recs.sort(key=lambda r: r["result"].get(sort_by, 0.0), reverse=not ascending)
+    cols = ["job_id", "arch", "policy", "chips", "throughput_rps",
+            "p50_s", "p99_s", "utilization", "cost_per_1k_req"]
+    lines = ["  ".join(f"{c:>16}" for c in cols)]
+    for r in recs[:limit]:
+        res = r["result"]
+        row = [r.get("job_id", "?"), r.get("arch", "?"),
+               r.get("policy", "?"), r.get("chips", "?")]
+        row += [f"{res.get(k, float('nan')):.4g}" for k in cols[4:]]
+        lines.append("  ".join(f"{str(c):>16}" for c in row))
+    return "\n".join(lines)

@@ -1,0 +1,169 @@
+"""Canonical model generator (paper §4.2.2).
+
+Builds parameterised micro-models from the paper's four block families —
+FC, residual CNN, LSTM, transformer — across swept hyper-parameters
+(layer count, width/neurons, batch size).  Unlike the registered real-world
+archs these run *for real* on CPU, so the sensitivity heat maps (Fig. 9)
+and generated-model rooflines (Fig. 10b) use measured numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FAMILIES = ("fc", "cnn", "lstm", "transformer")
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneratedSpec:
+    family: str
+    layers: int = 4
+    width: int = 256          # neurons / channels / hidden / d_model
+    batch: int = 1
+    seq: int = 64             # lstm/transformer sequence, cnn spatial 32²
+    num_classes: int = 100
+
+    @property
+    def name(self) -> str:
+        return f"{self.family}-L{self.layers}-W{self.width}"
+
+
+def _dense(key, i, o):
+    return jax.random.normal(key, (i, o), jnp.float32) / math.sqrt(i)
+
+
+def build(spec: GeneratedSpec) -> Tuple[Dict, Callable, Tuple]:
+    """Returns (params, apply_fn, example_inputs)."""
+    key = jax.random.key(hash(spec.name) % (2 ** 31))
+    ks = jax.random.split(key, spec.layers + 2)
+    W = spec.width
+
+    if spec.family == "fc":
+        params = {"in": _dense(ks[0], W, W),
+                  "layers": jnp.stack([_dense(ks[i + 1], W, W)
+                                       for i in range(spec.layers)]),
+                  "out": _dense(ks[-1], W, spec.num_classes)}
+
+        def apply(p, x):
+            h = jnp.tanh(x @ p["in"])
+            def body(h, w):
+                return jnp.tanh(h @ w), None
+            h, _ = jax.lax.scan(body, h, p["layers"])
+            return h @ p["out"]
+        x = jnp.ones((spec.batch, W), jnp.float32)
+        return params, apply, (x,)
+
+    if spec.family == "cnn":
+        C = max(W // 16, 8)
+        def conv_w(k, ci, co):
+            return jax.random.normal(k, (3, 3, ci, co), jnp.float32) \
+                / math.sqrt(9 * ci)
+        params = {"in": conv_w(ks[0], 3, C),
+                  "layers": jnp.stack([conv_w(ks[i + 1], C, C)
+                                       for i in range(spec.layers)]),
+                  "out": _dense(ks[-1], C, spec.num_classes)}
+
+        def apply(p, x):
+            dn = jax.lax.conv_dimension_numbers(x.shape, p["in"].shape,
+                                                ("NHWC", "HWIO", "NHWC"))
+            h = jax.nn.relu(jax.lax.conv_general_dilated(
+                x, p["in"], (1, 1), "SAME", dimension_numbers=dn))
+            def body(h, w):
+                y = jax.lax.conv_general_dilated(
+                    h, w, (1, 1), "SAME", dimension_numbers=dn)
+                return jax.nn.relu(y) + h, None      # residual block
+            h, _ = jax.lax.scan(body, h, p["layers"])
+            return h.mean(axis=(1, 2)) @ p["out"]
+        x = jnp.ones((spec.batch, 32, 32, 3), jnp.float32)
+        return params, apply, (x,)
+
+    if spec.family == "lstm":
+        def cell_w(k):
+            k1, k2 = jax.random.split(k)
+            return {"wx": _dense(k1, W, 4 * W), "wh": _dense(k2, W, 4 * W)}
+        params = {"in": _dense(ks[0], W, W),
+                  "layers": jax.tree.map(
+                      lambda *xs: jnp.stack(xs),
+                      *[cell_w(ks[i + 1]) for i in range(spec.layers)]),
+                  "out": _dense(ks[-1], W, spec.num_classes)}
+
+        def lstm_layer(w, xs):
+            def step(carry, x):
+                h, c = carry
+                z = x @ w["wx"] + h @ w["wh"]
+                i, f, g, o = jnp.split(z, 4, axis=-1)
+                c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+                h = jax.nn.sigmoid(o) * jnp.tanh(c)
+                return (h, c), h
+            B = xs.shape[1]
+            h0 = (jnp.zeros((B, W)), jnp.zeros((B, W)))
+            _, hs = jax.lax.scan(step, h0, xs)
+            return hs
+
+        def apply(p, x):
+            hs = jnp.tanh(x @ p["in"]).transpose(1, 0, 2)     # (S, B, W)
+            def body(hs, w):
+                return lstm_layer(w, hs), None
+            hs, _ = jax.lax.scan(body, hs, p["layers"])
+            return hs[-1] @ p["out"]
+        x = jnp.ones((spec.batch, spec.seq, W), jnp.float32)
+        return params, apply, (x,)
+
+    if spec.family == "transformer":
+        H = max(W // 64, 1)
+        def block_w(k):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            return {"wq": _dense(k1, W, W), "wk": _dense(k2, W, W),
+                    "wv": _dense(k3, W, W), "wo": _dense(k4, W, W),
+                    "w1": _dense(jax.random.fold_in(k1, 9), W, 4 * W),
+                    "w2": _dense(jax.random.fold_in(k2, 9), 4 * W, W)}
+        params = {"in": _dense(ks[0], W, W),
+                  "layers": jax.tree.map(
+                      lambda *xs: jnp.stack(xs),
+                      *[block_w(ks[i + 1]) for i in range(spec.layers)]),
+                  "out": _dense(ks[-1], W, spec.num_classes)}
+
+        def apply(p, x):
+            h = x @ p["in"]
+            def body(h, w):
+                B, S, _ = h.shape
+                q = (h @ w["wq"]).reshape(B, S, H, W // H)
+                k = (h @ w["wk"]).reshape(B, S, H, W // H)
+                v = (h @ w["wv"]).reshape(B, S, H, W // H)
+                logits = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(W // H)
+                mask = jnp.tril(jnp.ones((S, S), bool))
+                logits = jnp.where(mask, logits, -1e30)
+                a = jax.nn.softmax(logits, -1)
+                o = jnp.einsum("bhst,bthd->bshd", a, v).reshape(B, S, W)
+                h = h + o @ w["wo"]
+                h = h + jax.nn.relu(h @ w["w1"]) @ w["w2"]
+                return h, None
+            h, _ = jax.lax.scan(body, h, p["layers"])
+            return h[:, -1] @ p["out"]
+        x = jnp.ones((spec.batch, spec.seq, W), jnp.float32)
+        return params, apply, (x,)
+
+    raise ValueError(spec.family)
+
+
+def flops_estimate(spec: GeneratedSpec) -> float:
+    """Analytic inference FLOPs per example (for roofline intensity)."""
+    W, L, S = spec.width, spec.layers, spec.seq
+    if spec.family == "fc":
+        return 2 * W * W * (L + 1) + 2 * W * spec.num_classes
+    if spec.family == "cnn":
+        C = max(W // 16, 8)
+        return 2 * 9 * C * C * 32 * 32 * L + 2 * 9 * 3 * C * 32 * 32
+    if spec.family == "lstm":
+        return S * L * 2 * (W * 4 * W * 2)
+    if spec.family == "transformer":
+        return S * L * (2 * 4 * W * W + 2 * 8 * W * W) + 4 * S * S * W * L
+    raise ValueError(spec.family)
+
+
+def param_bytes(params) -> float:
+    return float(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)))

@@ -1,0 +1,96 @@
+"""Benchmark job specification — the paper's "a YAML file with a few lines".
+
+A ``BenchmarkJobSpec`` fully describes one benchmark task: which model
+(a registered arch or a generated canonical model), which hardware tier,
+which serving-software tier (batching policy + runtime options), which
+workload, and which metrics/SLO to evaluate.  ``SweepSpec`` expands the
+cross-product the way the paper's system iterates configurations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+from repro.serving.workload import WorkloadSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelRef:
+    kind: str = "registered"        # registered | generated
+    name: str = "gemma2-2b"         # arch id, or generated family
+    # generated-model hyper-parameters (paper's canonical generator):
+    family: str = "transformer"     # fc | cnn | lstm | transformer
+    layers: int = 4
+    width: int = 256
+    batch_hint: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftwareSpec:
+    policy: str = "tris"            # none | tfs | tris
+    max_batch: int = 8
+    timeout_s: float = 0.005
+    preferred: Sequence[int] = (8, 4, 2, 1)
+    int8: bool = False              # the paper's INT8-conversion step
+    use_pallas_kernels: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchmarkJobSpec:
+    job_id: str
+    user: str = "dev"
+    model: ModelRef = ModelRef()
+    hardware: str = "tpu-v5e"
+    chips: int = 8
+    software: SoftwareSpec = SoftwareSpec()
+    workload: WorkloadSpec = WorkloadSpec()
+    network: str = "lan"
+    slo_latency_s: Optional[float] = None
+    metrics: Sequence[str] = ("latency", "throughput", "cost", "utilization")
+    est_processing_s: float = 1.0   # scheduler hint (paper: known a priori)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "BenchmarkJobSpec":
+        d = dict(d)
+        if isinstance(d.get("model"), dict):
+            d["model"] = ModelRef(**d["model"])
+        if isinstance(d.get("software"), dict):
+            sw = dict(d["software"])
+            if isinstance(sw.get("preferred"), list):
+                sw["preferred"] = tuple(sw["preferred"])
+            d["software"] = SoftwareSpec(**sw)
+        if isinstance(d.get("workload"), dict):
+            d["workload"] = WorkloadSpec(**d["workload"])
+        if isinstance(d.get("metrics"), list):
+            d["metrics"] = tuple(d["metrics"])
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, text: str) -> "BenchmarkJobSpec":
+        return cls.from_dict(json.loads(text))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Cross-product expansion (the paper's automatic iteration)."""
+    base: BenchmarkJobSpec
+    axes: Dict[str, List[Any]] = dataclasses.field(default_factory=dict)
+
+    def expand(self) -> Iterator[BenchmarkJobSpec]:
+        keys = list(self.axes)
+        for i, combo in enumerate(itertools.product(
+                *(self.axes[k] for k in keys))):
+            d = self.base.to_dict()
+            for k, v in zip(keys, combo):
+                node = d
+                *path, leaf = k.split(".")
+                for p in path:
+                    node = node[p]
+                node[leaf] = v
+            d["job_id"] = f"{self.base.job_id}-{i}"
+            yield BenchmarkJobSpec.from_dict(d)

@@ -1,0 +1,104 @@
+"""Hardware models for roofline / cost analysis.
+
+TPU v5e is the primary target (the mesh in launch/mesh.py is a v5e pod).
+The paper's Table-1 GPUs are retained so the cross-hardware analyses of
+InferBench (Fig. 7/8/10) can be reproduced against the same model set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Peak-rate model of one accelerator chip (the roofline ceiling)."""
+
+    name: str
+    arch: str
+    peak_flops: float          # FLOP/s at the serving dtype (bf16 for TPU)
+    peak_flops_fp32: float     # FLOP/s at fp32
+    hbm_bytes: int             # on-chip HBM capacity
+    hbm_bw: float              # bytes/s HBM bandwidth
+    link_bw: float             # bytes/s inter-chip interconnect per chip
+    tdp_watts: float           # board power for the energy model
+    cloud_usd_per_hour: Optional[float] = None  # on-demand, per chip/board
+
+    # ---- roofline helpers -------------------------------------------------
+    def ridge_intensity(self) -> float:
+        """Arithmetic intensity (FLOP/byte) at the memory/compute ridge."""
+        return self.peak_flops / self.hbm_bw
+
+    def attainable_flops(self, intensity: float) -> float:
+        """Roofline: attainable FLOP/s at a given arithmetic intensity."""
+        return min(self.peak_flops, intensity * self.hbm_bw)
+
+
+# Primary target: one TPU v5e chip (constants fixed by the assignment).
+TPU_V5E = HardwareModel(
+    name="tpu-v5e",
+    arch="TPU v5e",
+    peak_flops=197e12,          # bf16
+    peak_flops_fp32=98.5e12,
+    hbm_bytes=16 * 1024**3,
+    hbm_bw=819e9,
+    link_bw=50e9,               # per ICI link
+    tdp_watts=170.0,
+    cloud_usd_per_hour=1.20,    # public on-demand us-central pricing
+)
+
+# Paper Table 1 platforms (FP16 peak used as the serving dtype peak).
+GPU_V100 = HardwareModel(
+    name="v100", arch="GPU (Volta)", peak_flops=31.4e12,
+    peak_flops_fp32=15.7e12, hbm_bytes=32 * 1024**3, hbm_bw=900e9,
+    link_bw=25e9, tdp_watts=300.0, cloud_usd_per_hour=2.48)
+GPU_2080TI = HardwareModel(
+    name="2080ti", arch="GPU (Turing)", peak_flops=28.5e12,
+    peak_flops_fp32=14.25e12, hbm_bytes=11 * 1024**3, hbm_bw=616e9,
+    link_bw=8e9, tdp_watts=250.0, cloud_usd_per_hour=None)
+GPU_T4 = HardwareModel(
+    name="t4", arch="GPU (Turing)", peak_flops=16.2e12,
+    peak_flops_fp32=8.1e12, hbm_bytes=16 * 1024**3, hbm_bw=300e9,
+    link_bw=4e9, tdp_watts=70.0, cloud_usd_per_hour=0.95)
+GPU_P4 = HardwareModel(
+    name="p4", arch="GPU (Pascal)", peak_flops=11.0e12,
+    peak_flops_fp32=5.5e12, hbm_bytes=8 * 1024**3, hbm_bw=192e9,
+    link_bw=4e9, tdp_watts=75.0, cloud_usd_per_hour=0.60)
+CPU_XEON = HardwareModel(
+    name="cpu-xeon", arch="CPU", peak_flops=1.4e12,
+    peak_flops_fp32=1.4e12, hbm_bytes=128 * 1024**3, hbm_bw=68e9,
+    link_bw=1e9, tdp_watts=135.0, cloud_usd_per_hour=0.34)
+
+HARDWARE: Dict[str, HardwareModel] = {
+    h.name: h for h in (TPU_V5E, GPU_V100, GPU_2080TI, GPU_T4, GPU_P4, CPU_XEON)
+}
+
+# Energy → CO2: global-average grid intensity (kg CO2e per kWh), the same
+# methodology as carbontracker used in the paper's Fig. 8.
+CO2_KG_PER_KWH = 0.475
+
+# Cloud providers offering the chip (paper Fig. 8b uses anonymized labels).
+CLOUD_RATES_USD_PER_HOUR: Dict[str, Dict[str, float]] = {
+    "tpu-v5e": {"C1/I1": 1.20, "C1/I2": 0.84},        # on-demand vs 1yr-commit
+    "v100":    {"C1/I1": 2.48, "C2/I1": 3.06},
+    "t4":      {"C1/I3": 0.95, "C2/I3": 0.35},
+    "p4":      {"C2/I2": 0.60},
+}
+
+
+def energy_joules(hw: HardwareModel, seconds: float, util: float = 1.0) -> float:
+    """Energy for a span at a given average utilization (idle draw ~30% TDP)."""
+    avg_watts = hw.tdp_watts * (0.3 + 0.7 * min(max(util, 0.0), 1.0))
+    return avg_watts * seconds
+
+
+def co2_kg(joules: float) -> float:
+    return joules / 3.6e6 * CO2_KG_PER_KWH
+
+
+def cloud_cost_usd(hw_name: str, seconds: float, instance: str | None = None) -> float:
+    rates = CLOUD_RATES_USD_PER_HOUR.get(hw_name, {})
+    if not rates:
+        return 0.0
+    rate = rates[instance] if instance else min(rates.values())
+    return rate * seconds / 3600.0

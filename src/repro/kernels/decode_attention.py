@@ -1,0 +1,111 @@
+"""Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
+
+Decode attention is memory-bound (the whole KV cache streams HBM→VMEM once
+per step), so the kernel's job is to (a) never materialise the (H, T)
+logits in HBM and (b) keep per-block work vectorised over the head group.
+Tiling: grid = (B, K, T/bk); each step loads a (bk, d) K/V block and all G
+queries of the kv-head's group, maintaining online-softmax state per head
+in VMEM scratch.  Per-sequence ``lengths`` mask dead cache slots.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   block_k: int, sm_scale: float, softcap: float):
+    b = pl.program_id(0)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    k_start = kj * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale   # (G, bk)
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(k_pos < length, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.max(logits, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        denom = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray, *, softcap: float = 0.0,
+                     sm_scale: Optional[float] = None,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, d); k/v: (B, K, T, d); lengths: (B,) int32 → (B, H, d)."""
+    B, H, d = q.shape
+    K, T = k.shape[1], k.shape[2]
+    assert H % K == 0
+    G = H // K
+    block_k = min(block_k, T)
+    assert T % block_k == 0
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(B, K, G, d)
+
+    grid = (B, K, T // block_k)
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               sm_scale=sm_scale, softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, d), lambda b, h, j, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, *_: (b, h, j, 0)),
+                pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, *_: (b, h, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, j, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, d), q.dtype),
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(B, H, d)

@@ -1,0 +1,130 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+Blockwise online-softmax attention with GQA, sliding-window and logit
+soft-capping.  Tiling: grid = (B, H, Sq/bq, Skv/bk); the kv axis is the
+fastest (sequentially iterated on TPU), with the running max / sum / output
+accumulator held in VMEM scratch.  Block shapes are MXU-aligned (128).
+
+Causal + window structure is exploited: fully-masked kv blocks are skipped
+(no FLOPs issued), which is what makes the local-attention layers of
+gemma2 / recurrentgemma pay O(S·W) instead of O(S²).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, softcap: float, sm_scale: float,
+                  block_q: int, block_k: int, kv_len: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    # Block-level structure: skip blocks that are fully masked.
+    below_diag = (not causal) or (k_start <= q_start + block_q - 1)
+    if window > 0:
+        # a kv block is skippable only if its newest key is out of window
+        # for the *oldest* query in the q block
+        in_window = k_start + block_k - 1 > q_start - window
+        run = jnp.logical_and(below_diag, in_window)
+    else:
+        run = below_diag
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(logits, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kj == nkv - 1)
+    def _finalize():
+        l = l_scr[...]
+        denom = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, sm_scale: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, Sq, d); k/v: (B, K, Skv, d) → (B, H, Sq, d)."""
+    B, H, Sq, d = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    assert H % K == 0
+    G = H // K
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+
+    grid = (B, H, Sq // block_q, Skv // block_k)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, softcap=softcap,
+        sm_scale=sm_scale, block_q=block_q, block_k=block_k, kv_len=Skv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

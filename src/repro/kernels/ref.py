@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (naive, obviously-correct math).
+
+These are deliberately written as direct definitions — sequential scans and
+dense softmax — independent of the blocked/chunked algorithms the kernels
+use, so the allclose tests are meaningful.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, lengths=None) -> jnp.ndarray:
+    """q: (B, H, Sq, d); k/v: (B, K, Skv, d) (GQA) → (B, H, Sq, d)."""
+    B, H, Sq, d = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, Sq, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg,
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    mask = jnp.broadcast_to(mask, (B, Sq, Skv))
+    if lengths is not None:
+        mask &= (k_pos[None, None, :] < lengths[:, None, None])
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, d).astype(q.dtype)
+
+
+def decode_attention_reference(q, k, v, lengths) -> jnp.ndarray:
+    """q: (B, H, d); k/v: (B, K, T, d); lengths: (B,) → (B, H, d)."""
+    B, H, d = q.shape
+    out = mha_reference(q[:, :, None], k, v, causal=False, lengths=lengths)
+    return out[:, :, 0]
+
+
+def wkv6_reference(r, k, v, logw, u, state0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Naive sequential WKV recurrence.
+
+    r/k/v/logw: (B, S, H, N); u: (H, N); state0: (B, H, N, N) fp32.
+    """
+    f32 = jnp.float32
+    rr, kk, vv = r.astype(f32), k.astype(f32), v.astype(f32)
+    lw = logw.astype(f32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                           # (B, H, N)
+        o = (jnp.einsum("bhd,bhde->bhe", rt, state)
+             + jnp.einsum("bhd,hd,bhd,bhe->bhe", rt, u.astype(f32), kt, vt))
+        state = (jnp.exp(wt)[..., None] * state
+                 + jnp.einsum("bhd,bhe->bhde", kt, vt))
+        return state, o
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rr, kk, vv, lw))
+    final, outs = jax.lax.scan(step, state0.astype(f32), xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), final
+
+
+def rglru_reference(a, b, s0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Naive gated linear recurrence: s_t = a_t s_{t-1} + b_t.
+
+    a/b: (B, S, R) fp32; s0: (B, R) fp32 → (seq (B,S,R), last (B,R)).
+    """
+    def step(s, xs):
+        at, bt = xs
+        s = at * s + bt
+        return s, s
+    xs = (a.transpose(1, 0, 2), b.transpose(1, 0, 2))
+    last, seq = jax.lax.scan(step, s0, xs)
+    return seq.transpose(1, 0, 2), last
+
+
+def int8_matmul_reference(x_q, w_q, sx, sw) -> jnp.ndarray:
+    """Dequantize-then-matmul oracle.
+
+    x_q: (M, K) int8; w_q: (K, N) int8; sx: (M,) fp32; sw: (N,) fp32.
+    """
+    x = x_q.astype(jnp.float32) * sx[:, None]
+    w = w_q.astype(jnp.float32) * sw[None, :]
+    return x @ w
+
+
+def quantize_rowwise(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-row int8 quantization → (q, scales)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.float32)

@@ -1,0 +1,258 @@
+"""Cell construction: (architecture × input shape × mesh) → jittable step.
+
+A "cell" bundles the step function, abstract input operands
+(ShapeDtypeStructs — never allocated), and in/out shardings resolved from
+the logical-axis rules.  Used by the dry-run, the roofline analysis and
+the serving latency model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config
+from repro.configs.shapes import DECODE, PREFILL, TRAIN
+from repro.dist import sharding as shd
+from repro.models.config import ModelConfig
+from repro.models.registry import build_model, model_flops_per_token
+from repro.serving.engine import (make_decode_fn, make_prefill_fn,
+                                  serving_config)
+from repro.training.optimizer import OptimizerConfig, opt_state_axes
+from repro.training.step import init_train_state, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    mesh: Mesh
+    fn: Callable                     # jit-wrapped step
+    args: Tuple[Any, ...]            # ShapeDtypeStruct operands
+    model_flops: float               # 6·N·D (train) / 2·N·D (serve)
+    tokens: int
+    cfg: ModelConfig
+    mem_info: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+def _sharding_bytes(shape_tree, sharding_tree, mesh) -> int:
+    specs = jax.tree.map(lambda s: s.spec, sharding_tree,
+                         is_leaf=lambda x: isinstance(x, NamedSharding))
+    return shd.bytes_per_device(shape_tree, specs, mesh)
+
+
+def _batch_dev(B: int, rules, mesh) -> int:
+    spec = shd.partition_spec((B,), ("batch",), rules, mesh)
+    sizes = dict(mesh.shape)
+    factor = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in ((entry,) if isinstance(entry, str) else entry):
+            factor *= sizes[a]
+    return max(B // factor, 1)
+
+
+def _vocab_shard_bytes(cfg, rules, mesh) -> float:
+    spec = shd.partition_spec((cfg.vocab_size, cfg.d_model),
+                              ("vocab", "embed"), rules, mesh)
+    sizes = dict(mesh.shape)
+    factor = 1
+    entry = spec[0] if len(spec) else None
+    if entry is not None:
+        for a in ((entry,) if isinstance(entry, str) else entry):
+            factor *= sizes[a]
+    return cfg.vocab_size // factor * 4.0   # f32 logits row per token
+
+
+def _repl(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def _batch_inputs(cfg: ModelConfig, shape: ShapeSpec, kind: str):
+    """(sds_tree, axes_tree) for the data operands of a cell."""
+    B, S = shape.global_batch, shape.seq_len
+    act_dt = cfg.activation_dtype
+    if kind == TRAIN:
+        n_front = cfg.num_frontend_tokens if cfg.frontend == "vision_patches" else 0
+        S_tok = S - n_front
+        sds = {"tokens": SDS((B, S_tok), jnp.int32),
+               "labels": SDS((B, S_tok), jnp.int32),
+               "loss_mask": SDS((B, S_tok), jnp.float32)}
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+                "loss_mask": ("batch", "seq")}
+        if cfg.is_encdec:
+            sds["frames"] = SDS((B, S, cfg.d_model), act_dt)
+            axes["frames"] = ("batch", "seq", "act_embed")
+        if n_front:
+            sds["patches"] = SDS((B, n_front, cfg.d_model), act_dt)
+            axes["patches"] = ("batch", "seq", "act_embed")
+        return sds, axes
+    if kind == PREFILL:
+        n_front = cfg.num_frontend_tokens if cfg.frontend == "vision_patches" else 0
+        S_tok = S - n_front
+        sds = {"tokens": SDS((B, S_tok), jnp.int32),
+               "lengths": SDS((B,), jnp.int32)}
+        axes = {"tokens": ("batch", "seq"), "lengths": ("batch",)}
+        if cfg.is_encdec:
+            sds["frames"] = SDS((B, S, cfg.d_model), act_dt)
+            axes["frames"] = ("batch", "seq", "act_embed")
+        if n_front:
+            sds["patches"] = SDS((B, n_front, cfg.d_model), act_dt)
+            axes["patches"] = ("batch", "seq", "act_embed")
+        return sds, axes
+    if kind == DECODE:
+        return ({"tokens": SDS((B,), jnp.int32)}, {"tokens": ("batch",)})
+    raise ValueError(kind)
+
+
+def _cell_flops(cfg: ModelConfig, shape: ShapeSpec, kind: str) -> Tuple[float, int]:
+    per_tok = model_flops_per_token(cfg)          # 6·N_active
+    if kind == TRAIN:
+        tokens = shape.global_batch * shape.seq_len
+        return per_tok * tokens, tokens
+    if kind == PREFILL:
+        tokens = shape.global_batch * shape.seq_len
+        return per_tok / 3.0 * tokens, tokens     # fwd-only: 2·N·D
+    tokens = shape.global_batch                    # one token per sequence
+    return per_tok / 3.0 * tokens, tokens
+
+
+def build_train_cell(arch: str, shape: ShapeSpec, mesh: Mesh,
+                     rules: Optional[shd.Rules] = None,
+                     grad_accum: int = 1, remat: bool = True,
+                     cfg: Optional[ModelConfig] = None) -> Cell:
+    rules = rules or shd.TRAIN_RULES
+    cfg = cfg or get_config(arch)
+    model = build_model(cfg)
+    params_sds, opt_sds = jax.eval_shape(
+        lambda: init_train_state(model, jax.random.key(0)))
+    p_axes = model.logical_axes()
+    o_axes = opt_state_axes(p_axes)
+    p_sh = shd.tree_shardings(params_sds, p_axes, rules, mesh)
+    o_sh = shd.tree_shardings(opt_sds, o_axes, rules, mesh)
+    batch_sds, b_axes = _batch_inputs(cfg, shape, TRAIN)
+    b_sh = shd.tree_shardings(batch_sds, b_axes, rules, mesh)
+    metrics_sh = {k: _repl(mesh) for k in
+                  ("grad_norm", "lr", "loss", "moe_aux")}
+    raw_step = make_train_step(model, OptimizerConfig(), grad_accum=grad_accum,
+                               remat=remat)
+
+    def step(params, opt_state, batch):
+        shd.set_activation_sharding(mesh, rules)
+        try:
+            return raw_step(params, opt_state, batch)
+        finally:
+            shd.set_activation_sharding(None, None)
+
+    fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                 out_shardings=(p_sh, o_sh, metrics_sh),
+                 donate_argnums=(0, 1))
+    flops, tokens = _cell_flops(cfg, shape, TRAIN)
+    mem_info = {
+        "params_bytes": _sharding_bytes(params_sds, p_sh, mesh),
+        "opt_bytes": _sharding_bytes(opt_sds, o_sh, mesh),
+        "cache_bytes": 0.0,
+        "batch_dev": _batch_dev(shape.global_batch, rules, mesh),
+        "vocab_shard_bytes_per_token": _vocab_shard_bytes(cfg, rules, mesh),
+    }
+    return Cell(arch, shape, mesh, fn, (params_sds, opt_sds, batch_sds),
+                flops, tokens, cfg, mem_info)
+
+
+def build_prefill_cell(arch: str, shape: ShapeSpec, mesh: Mesh,
+                       rules: Optional[shd.Rules] = None,
+                       cfg: Optional[ModelConfig] = None) -> Cell:
+    rules = rules or shd.SERVE_RULES
+    cfg = serving_config(cfg or get_config(arch))
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    p_sh = shd.tree_shardings(params_sds, model.logical_axes(), rules, mesh)
+    batch_sds, b_axes = _batch_inputs(cfg, shape, PREFILL)
+    b_sh = shd.tree_shardings(batch_sds, b_axes, rules, mesh)
+    prefill = make_prefill_fn(model)
+
+    def step(params, batch):
+        shd.set_activation_sharding(mesh, rules)
+        try:
+            return prefill(params, **batch)
+        finally:
+            shd.set_activation_sharding(None, None)
+
+    cache_sds = jax.eval_shape(step, params_sds, batch_sds)[0]
+    c_sh = shd.tree_shardings(cache_sds, model.cache_axes(), rules, mesh)
+    logits_sh = NamedSharding(mesh, shd.partition_spec(
+        (shape.global_batch, cfg.vocab_size), ("batch", "vocab"), rules, mesh))
+    fn = jax.jit(step, in_shardings=(p_sh, b_sh),
+                 out_shardings=(c_sh, logits_sh))
+    flops, tokens = _cell_flops(cfg, shape, PREFILL)
+    mem_info = {
+        "params_bytes": _sharding_bytes(params_sds, p_sh, mesh),
+        "cache_bytes": _sharding_bytes(cache_sds, c_sh, mesh),
+        "batch_dev": _batch_dev(shape.global_batch, rules, mesh),
+        "vocab_shard_bytes_per_token": _vocab_shard_bytes(cfg, rules, mesh),
+    }
+    return Cell(arch, shape, mesh, fn, (params_sds, batch_sds),
+                flops, tokens, cfg, mem_info)
+
+
+def build_decode_cell(arch: str, shape: ShapeSpec, mesh: Mesh,
+                      rules: Optional[shd.Rules] = None,
+                      cfg: Optional[ModelConfig] = None) -> Cell:
+    rules = rules or shd.SERVE_RULES
+    cfg = serving_config(cfg or get_config(arch))
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    p_sh = shd.tree_shardings(params_sds, model.logical_axes(), rules, mesh)
+    if cfg.is_encdec:
+        cache_sds = jax.eval_shape(lambda: model.init_cache(B, S, enc_len=S))
+    else:
+        cache_sds = jax.eval_shape(lambda: model.init_cache(B, S))
+    c_sh = shd.tree_shardings(cache_sds, model.cache_axes(), rules, mesh)
+    tok_sds = SDS((B,), jnp.int32)
+    tok_sh = NamedSharding(mesh, shd.partition_spec((B,), ("batch",), rules,
+                                                    mesh))
+    logits_sh = NamedSharding(mesh, shd.partition_spec(
+        (B, cfg.vocab_size), ("batch", "vocab"), rules, mesh))
+    raw_decode = make_decode_fn(model)
+
+    def decode(params, cache, tokens):
+        shd.set_activation_sharding(mesh, rules)
+        try:
+            return raw_decode(params, cache, tokens)
+        finally:
+            shd.set_activation_sharding(None, None)
+
+    fn = jax.jit(decode, in_shardings=(p_sh, c_sh, tok_sh),
+                 out_shardings=(c_sh, logits_sh), donate_argnums=(1,))
+    flops, tokens = _cell_flops(cfg, shape, DECODE)
+    mem_info = {
+        "params_bytes": _sharding_bytes(params_sds, p_sh, mesh),
+        "cache_bytes": _sharding_bytes(cache_sds, c_sh, mesh),
+        "batch_dev": _batch_dev(shape.global_batch, rules, mesh),
+        "vocab_shard_bytes_per_token": _vocab_shard_bytes(cfg, rules, mesh),
+    }
+    return Cell(arch, shape, mesh, fn, (params_sds, cache_sds, tok_sds),
+                flops, tokens, cfg, mem_info)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               rules: Optional[shd.Rules] = None,
+               cfg: Optional[ModelConfig] = None, **kw) -> Cell:
+    shape = SHAPES[shape_name]
+    if shape.kind == TRAIN:
+        return build_train_cell(arch, shape, mesh, rules, cfg=cfg, **kw)
+    if shape.kind == PREFILL:
+        return build_prefill_cell(arch, shape, mesh, rules, cfg=cfg)
+    return build_decode_cell(arch, shape, mesh, rules, cfg=cfg)

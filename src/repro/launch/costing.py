@@ -1,0 +1,57 @@
+"""Pure helpers for the dry-run cost pass (importable without touching
+jax device state — repro.launch.dryrun forces a 512-device host platform
+at import, so tests use this module instead)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.analysis import hlo as hlo_lib
+
+COLL_KINDS = hlo_lib.COLLECTIVE_KINDS
+
+
+def depth_variants(cfg):
+    """Two depth-reduced cost configs + (n1, n_full) period counts."""
+    pl_ = len(cfg.layer_pattern)
+    if cfg.is_encdec:
+        assert cfg.encoder_layers == cfg.num_layers, \
+            "depth extrapolation assumes enc depth == dec depth"
+        mk = lambda n: dataclasses.replace(cfg, num_layers=n,
+                                           encoder_layers=n, cost_unroll=True)
+        return mk(1), mk(2), 1, cfg.num_layers
+    tail = cfg.num_layers % pl_
+    mk = lambda L: dataclasses.replace(cfg, num_layers=L, cost_unroll=True)
+    return (mk(pl_ + tail), mk(2 * pl_ + tail), 1, cfg.num_layers // pl_)
+
+
+def extract_costs(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    colls = hlo_lib.parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "collectives": colls,
+    }
+
+
+def extrapolate(c1: dict, c2: dict, n1: int, n_full: int) -> dict:
+    """cost(d1) + (n_full − n1) · (cost(d2) − cost(d1)), clamped ≥ cost(d1)."""
+    mult = n_full - n1
+
+    def ext(a, b):
+        return a + mult * max(b - a, 0.0)
+
+    colls = {}
+    for kind in COLL_KINDS:
+        a = c1["collectives"].get(kind, {"bytes": 0, "count": 0})
+        b = c2["collectives"].get(kind, {"bytes": 0, "count": 0})
+        colls[kind] = {"bytes": ext(a["bytes"], b["bytes"]),
+                       "count": ext(a["count"], b["count"])}
+    return {
+        "flops": ext(c1["flops"], c2["flops"]),
+        "bytes": ext(c1["bytes"], c2["bytes"]),
+        "transcendentals": ext(c1["transcendentals"], c2["transcendentals"]),
+        "collectives": colls,
+    }

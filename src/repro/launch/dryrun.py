@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Two passes per cell:
+
+1. PRODUCTION pass — the real scanned-layers step, compiled on the target
+   mesh.  Proves the sharding config lowers+compiles, and provides
+   ``memory_analysis()`` (HBM fit) and compile timings.
+
+2. COST pass — XLA's ``cost_analysis()`` counts a while-loop body ONCE, so
+   FLOPs/bytes/collectives of the scanned program undercount by the trip
+   count.  We therefore compile two depth-reduced variants of the same
+   model (same widths/shapes, all internal scans unrolled via
+   ``cfg.cost_unroll``) and extrapolate exactly:
+
+       cost(L) = outside + n_periods(L) · per_period
+       per_period = cost(d2) − cost(d1);  total = cost(d1) + (n_full − n1)·per_period
+
+   The roofline table (EXPERIMENTS.md §Roofline) reads from this pass.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.launch.costing import depth_variants, extract_costs, extrapolate
+
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import memory_model
+from repro.analysis import roofline as roofline_lib
+from repro.configs import ARCHS, SHAPES, applicable, get_config
+from repro.dist import sharding as shd
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+RULE_SETS = {
+    "default": None,
+    "tp": shd.SERVE_TP_RULES,
+    "ep": shd.MOE_EP_RULES,
+    "moe_local": shd.MOE_LOCAL_RULES,
+    "moe_sp": shd.MOE_SP_RULES,
+    "moe_sp_tp": shd.MOE_SP_TP_RULES,
+    "ep_local": shd.MOE_EP_LOCAL_RULES,
+}
+
+COLL_KINDS = hlo_lib.COLLECTIVE_KINDS
+
+
+
+
+
+
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules_name: str = "default", grad_accum: int = 1,
+             remat: bool = True, cost_pass: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "rules": rules_name, "ok": False}
+    if not applicable(shape, cfg):
+        rec.update(ok=True, skipped=True,
+                   reason="long_500k needs sub-quadratic attention; "
+                          "this arch has global full attention")
+        return rec
+    rules = RULE_SETS[rules_name]
+    kw = dict(grad_accum=grad_accum, remat=remat) if shape.kind == "train" else {}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        # ---- production pass --------------------------------------------
+        cell = build_cell(arch, shape_name, mesh, rules, **kw)
+        t0 = time.time()
+        with mesh:
+            lowered = cell.lower()
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        prod_costs = extract_costs(compiled)
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            tokens=cell.tokens,
+            memory={
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or 0),
+            },
+            production_costs_scan_body_once=prod_costs,
+        )
+        # ---- cost pass (depth-diff, unrolled) ----------------------------
+        if cost_pass:
+            d1, d2, n1, n_full = depth_variants(cfg)
+            costs = []
+            for dcfg in (d1, d2):
+                c = build_cell(arch, shape_name, mesh, rules, cfg=dcfg, **kw)
+                with mesh:
+                    costs.append(extract_costs(c.lower().compile()))
+            total = extrapolate(costs[0], costs[1], n1, n_full)
+            bytes_model = memory_model.estimate_bytes(
+                shape.kind, cell.cfg, shape, cell.mem_info)
+            report = roofline_lib.analyze(
+                flops_per_device=total["flops"],
+                bytes_per_device=total["bytes"],
+                bytes_model_per_device=bytes_model,
+                collectives=total["collectives"],
+                chips=chips, model_flops=cell.model_flops)
+            rec["roofline"] = report.to_dict()
+            rec["cost_depths"] = [d1.num_layers, d2.num_layers, n_full]
+    except Exception as e:  # a failed cell is a bug — record it loudly
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--rules", default="default", choices=list(RULE_SETS))
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-cost-pass", action="store_true",
+                    help="compile-proof only (skip the roofline cost pass)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}" \
+                      + ("" if args.rules == "default" else f"__{args.rules}")
+                rec = run_cell(arch, shape, multi, args.rules,
+                               grad_accum=args.grad_accum,
+                               remat=not args.no_remat,
+                               cost_pass=not args.no_cost_pass)
+                (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+                status = ("SKIP" if rec.get("skipped")
+                          else "OK" if rec["ok"] else "FAIL")
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+                dom = rec.get("roofline", {}).get("dominant", "-")
+                step = rec.get("roofline", {}).get("step_time_s", 0)
+                mfu = rec.get("roofline", {}).get("model_flops_util", 0)
+                print(f"[{status}] {tag:58s} dom={dom:10s} "
+                      f"step={step:.4f}s mfu={mfu:.3f}", flush=True)
+                if not rec["ok"]:
+                    print("   ", rec.get("error"), flush=True)
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

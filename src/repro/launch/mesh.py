@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Single pod = 16×16 = 256 TPU v5e chips, axes ("data", "model").
+Multi-pod = 2 pods = 512 chips, axes ("pod", "data", "model"); the pod
+axis extends data parallelism across the (slower) inter-pod links while
+model parallelism stays inside a pod's ICI domain.
+
+Defined as functions so importing this module never touches jax device
+state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """A mesh over whatever devices exist (CPU smoke / single host)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

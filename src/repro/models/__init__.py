@@ -1,0 +1,5 @@
+from repro.models.config import ModelConfig, reduced
+from repro.models.registry import build_model, count_params, model_flops_per_token
+
+__all__ = ["ModelConfig", "reduced", "build_model", "count_params",
+           "model_flops_per_token"]

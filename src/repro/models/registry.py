@@ -1,0 +1,56 @@
+"""Model construction + parameter accounting."""
+from __future__ import annotations
+
+from typing import Any, Dict, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+
+ModelT = Union[DecoderLM, EncDecLM]
+
+
+def build_model(cfg: ModelConfig) -> ModelT:
+    if cfg.is_encdec:
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+def param_shapes(model: ModelT) -> Any:
+    """abstract param pytree (no allocation)."""
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def count_params(tree, exclude_embed: bool = False) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if exclude_embed and any(
+                getattr(k, "key", None) == "embed" for k in path):
+            continue
+        total += int(np.prod(leaf.shape))
+    return total
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """MODEL_FLOPS/token = 6·N (dense) or 6·N_active (MoE), N excl. embeddings.
+
+    Computed from the *real* parameter pytree so it tracks the implementation
+    exactly; for MoE, the expert weights are scaled by k/E to get N_active.
+    """
+    model = build_model(cfg)
+    shapes = param_shapes(model)
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(k, "key", None) for k in path]
+        if "embed" in keys:
+            continue
+        n = float(np.prod(leaf.shape))
+        if cfg.is_moe and any(k in ("wi", "wg", "wo") for k in keys) \
+                and "ffn" in keys:
+            n *= cfg.experts_per_token / cfg.num_experts
+        total += n
+    return 6.0 * total

@@ -1,0 +1,160 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block = [x-branch: linear → causal depthwise conv(4) → RG-LRU] ⊙ gelu(y-branch),
+then output projection.  The RG-LRU is a gated diagonal linear recurrence
+
+    r_t = σ(W_a h_x + b_a)          (recurrence gate)
+    i_t = σ(W_x h_x + b_x)          (input gate)
+    a_t = exp(c · r_t · log σ(Λ))   (per-channel data-dependent decay, c = 8)
+    s_t = a_t ⊙ s_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ h_x)
+
+Sequence mode uses an associative scan (O(log S) depth); decode mode is the
+one-step recurrence against carried state.  The Pallas kernel in
+``repro.kernels.rglru_scan`` implements the sequential-in-VMEM variant.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+C_CONST = 8.0
+CONV_WIDTH = 4
+
+
+def rglru_init(key, d: int, r: int, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    def w(k, i, o):
+        return (jax.random.normal(k, (i, o), dtype=jnp.float32)
+                / math.sqrt(i)).astype(dtype)
+    # Λ initialised so that σ(Λ) ∈ (0.9, 0.999) — the Griffin init.
+    u = jax.random.uniform(ks[5], (r,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "w_x_in": w(ks[0], d, r),
+        "w_y_in": w(ks[1], d, r),
+        "conv": (jax.random.normal(ks[2], (CONV_WIDTH, r), dtype=jnp.float32)
+                 / math.sqrt(CONV_WIDTH)).astype(dtype),
+        "w_a": w(ks[3], r, r),
+        "w_i": w(ks[4], r, r),
+        "b_a": jnp.zeros((r,), dtype),
+        "b_i": jnp.zeros((r,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": w(jax.random.fold_in(ks[0], 7), r, d),
+    }
+
+
+def rglru_axes() -> Dict:
+    return {
+        "w_x_in": ("embed", "rnn"), "w_y_in": ("embed", "rnn"),
+        "conv": (None, "rnn"),
+        "w_a": ("rnn", "rnn_in"), "w_i": ("rnn", "rnn_in"),
+        "b_a": ("rnn",), "b_i": ("rnn",), "lam": ("rnn",),
+        "w_out": ("rnn", "embed"),
+    }
+
+
+def _gates(params: Dict, hx: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-step decay a_t and input branch (both fp32). hx: (..., R)."""
+    h32 = hx.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(h32 @ params["w_a"].astype(jnp.float32)
+                            + params["b_a"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(h32 @ params["w_i"].astype(jnp.float32)
+                            + params["b_i"].astype(jnp.float32))
+    log_a = C_CONST * r_gate * jax.nn.log_sigmoid(params["lam"])
+    a = jnp.exp(log_a)
+    gated_in = i_gate * h32
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * gated_in
+
+
+def rglru_scan_seq(params: Dict, hx: jnp.ndarray,
+                   s0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Associative scan over the sequence. hx: (B,S,R), s0: (B,R) fp32."""
+    a, b = _gates(params, hx)                                     # (B,S,R) fp32
+    # fold initial state into the first step: s_1 = a_1 s_0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * s0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return s.astype(hx.dtype), s[:, -1]
+
+
+def rglru_step(params: Dict, hx: jnp.ndarray,
+               s0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step. hx: (B,R), s0: (B,R) fp32."""
+    a, b = _gates(params, hx)
+    s1 = a * s0 + b
+    return s1.astype(hx.dtype), s1
+
+
+def _causal_conv_seq(w: jnp.ndarray, x: jnp.ndarray,
+                     state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: (B,S,R), state: (B,W-1,R) past inputs."""
+    full = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(full[:, i:i + x.shape[1]] * w[i] for i in range(CONV_WIDTH))
+    new_state = full[:, -(CONV_WIDTH - 1):]
+    return out, new_state
+
+
+def rglru_block_seq(params: Dict, x: jnp.ndarray, state: Dict,
+                    valid=None) -> Tuple[jnp.ndarray, Dict]:
+    """Full Griffin recurrent block over a sequence.
+
+    x: (B, S, D); state = {"s": (B,R) fp32, "conv": (B, 3, R)}.
+    ``valid`` (B, S) masks right-padding: masked steps leave the recurrent
+    and conv states untouched so a later decode resumes exactly.
+    """
+    B, S, _ = x.shape
+    hx = jnp.einsum("bsd,dr->bsr", x, params["w_x_in"])
+    hy = jnp.einsum("bsd,dr->bsr", x, params["w_y_in"])
+    if valid is not None:
+        hx = hx * valid[..., None].astype(hx.dtype)
+    full = jnp.concatenate([state["conv"].astype(hx.dtype), hx], axis=1)
+    conv_out = sum(full[:, i:i + S] * params["conv"][i] for i in range(CONV_WIDTH))
+    if valid is None:
+        conv_state = full[:, -(CONV_WIDTH - 1):]
+        s_seq, s_last = rglru_scan_seq(params, conv_out, state["s"])
+    else:
+        lens = valid.sum(axis=1).astype(jnp.int32)
+        # conv state = inputs at positions len-3..len-1 → full[:, len:len+3]
+        idx = (lens[:, None] + jnp.arange(CONV_WIDTH - 1)[None, :])
+        conv_state = jnp.take_along_axis(full, idx[..., None], axis=1)
+        a, b = _gates(params, conv_out)
+        v = valid[..., None].astype(jnp.float32)
+        a = jnp.where(v > 0, a, 1.0)   # pad steps: s ← 1·s + 0
+        b = b * v
+        b = b.at[:, 0].add(a[:, 0] * state["s"])
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        _, s = jax.lax.associative_scan(combine, (a, b), axis=1)
+        s_seq, s_last = s.astype(hx.dtype), s[:, -1]
+    y = s_seq * jax.nn.gelu(hy)
+    out = jnp.einsum("bsr,rd->bsd", y, params["w_out"])
+    return out, {"s": s_last, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+def rglru_block_step(params: Dict, x: jnp.ndarray, state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode step. x: (B, D)."""
+    hx = x @ params["w_x_in"]
+    hy = x @ params["w_y_in"]
+    w = params["conv"]
+    conv_in = jnp.concatenate([state["conv"].astype(x.dtype), hx[:, None]], axis=1)
+    hx_c = sum(conv_in[:, i] * w[i] for i in range(CONV_WIDTH))
+    s1_act, s1 = rglru_step(params, hx_c, state["s"])
+    y = s1_act * jax.nn.gelu(hy)
+    out = y @ params["w_out"]
+    return out, {"s": s1, "conv": conv_in[:, 1:].astype(state["conv"].dtype)}
+
+
+def init_state(batch: int, r: int, dtype=jnp.float32) -> Dict:
+    return {"s": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_WIDTH - 1, r), dtype)}

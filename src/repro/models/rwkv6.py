@@ -1,0 +1,263 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence per head (state S ∈ R^{N×N}, N = head dim):
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ
+    o_t = r_tᵀ (diag(u) k_t v_tᵀ + S_{t-1})
+
+with per-channel data-dependent decay  w_t = exp(−exp(w0 + tanh(x Wa) Wb)).
+Sequence mode uses the exact *chunked* algorithm: within a chunk of T
+tokens the pairwise decay tensor exp(Σ logw) is materialised (it is ≤ 1 so
+this is overflow-safe), across chunks the N×N state is carried by a scan.
+``repro.kernels.wkv6`` is the Pallas TPU kernel of the same algorithm.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 32
+DECAY_LORA = 64
+
+
+# --------------------------------------------------------------------------
+# pure WKV math (shared with kernels/ref.py)
+# --------------------------------------------------------------------------
+def wkv_chunked(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                logw: jnp.ndarray, u: jnp.ndarray,
+                state0: jnp.ndarray, chunk: int = CHUNK
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r/k/v/logw: (B, S, H, N); u: (H, N); state0: (B, H, N, N) fp32.
+
+    Returns (out (B,S,H,N), final_state (B,H,N,N)).  S must divide by chunk.
+
+    All intra-chunk terms are computed for every chunk *in parallel*
+    (batched over a chunk axis); only the chunk-boundary states go through
+    a log-depth ``associative_scan`` with the combine
+        (d₂, U₂) ∘ (d₁, U₁) = (d₁·d₂, diag(d₂)·U₁ + U₂)
+    which is both faster on TPU (no length-S/T sequential loop) and exactly
+    cost-countable by XLA (no while op).
+    """
+    B, S, H, N = r.shape
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    nc = S // chunk
+    f32 = jnp.float32
+    # (B, C, H, T, N)
+    rc = r.astype(f32).reshape(B, nc, chunk, H, N).transpose(0, 1, 3, 2, 4)
+    kc = k.astype(f32).reshape(B, nc, chunk, H, N).transpose(0, 1, 3, 2, 4)
+    vc = v.astype(f32).reshape(B, nc, chunk, H, N).transpose(0, 1, 3, 2, 4)
+    wc = logw.astype(f32).reshape(B, nc, chunk, H, N).transpose(0, 1, 3, 2, 4)
+    u32 = u.astype(f32)
+
+    lc = jnp.cumsum(wc, axis=3)                   # inclusive Σ logw in chunk
+    lc_excl = lc - wc
+
+    # ---- per-chunk summaries (parallel over the chunk axis) -------------
+    # chunk decay d_c = e^{lc_T}; injected state U_c = Σ_s diag(e^{lc_T−lc_s}) k_s v_sᵀ
+    d = jnp.exp(lc[:, :, :, -1, :])                            # (B,C,H,N)
+    k_dec = kc * jnp.exp(lc[:, :, :, -1:, :] - lc)
+    U = jnp.einsum("bchsd,bchse->bchde", k_dec, vc)            # (B,C,H,N,N)
+
+    # ---- chunk-level recurrence via associative scan --------------------
+    def combine(c1, c2):
+        d1, u1 = c1
+        d2, u2 = c2
+        return d1 * d2, d2[..., None] * u1 + u2
+
+    d_acc, U_acc = jax.lax.associative_scan(combine, (d, U), axis=1)
+    # state *before* chunk c: shift by one, fold in state0
+    s_before = jnp.concatenate(
+        [jnp.zeros_like(U_acc[:, :1]), U_acc[:, :-1]], axis=1)
+    d_before = jnp.concatenate(
+        [jnp.ones_like(d_acc[:, :1]), d_acc[:, :-1]], axis=1)
+    s_before = s_before + d_before[..., None] * state0.astype(f32)[:, None]
+    final_state = (d_acc[:, -1][..., None] * state0.astype(f32)
+                   + U_acc[:, -1])
+
+    # ---- outputs (parallel over chunks) ----------------------------------
+    r_dec = rc * jnp.exp(lc_excl)
+    o_inter = jnp.einsum("bchtd,bchde->bchte", r_dec, s_before)
+    decay = jnp.exp(lc_excl[:, :, :, :, None, :] - lc[:, :, :, None, :, :])
+    A = jnp.einsum("bchtd,bchsd,bchtsd->bchts", rc, kc, decay)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    diag = jnp.einsum("bchtd,hd,bchtd->bcht", rc, u32, kc)
+    o_intra = jnp.einsum("bchts,bchse->bchte", A, vc) + diag[..., None] * vc
+    out = (o_inter + o_intra).transpose(0, 1, 3, 2, 4).reshape(B, S, H, N)
+    return out.astype(r.dtype), final_state
+
+
+def wkv_step(r, k, v, logw, u, state0):
+    """One decode step. r/k/v/logw: (B, H, N); state0: (B, H, N, N) fp32."""
+    f32 = jnp.float32
+    rr, kk, vv = r.astype(f32), k.astype(f32), v.astype(f32)
+    o = (jnp.einsum("bhd,bhde->bhe", rr, state0)
+         + jnp.einsum("bhd,hd,bhd,bhe->bhe", rr, u.astype(f32), kk, vv))
+    new_state = (jnp.exp(logw.astype(f32))[..., None] * state0
+                 + jnp.einsum("bhd,bhe->bhde", kk, vv))
+    return o.astype(r.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# RWKV6 layer (time-mix + channel-mix)
+# --------------------------------------------------------------------------
+def rwkv_init(key, d: int, d_ff: int, head_dim: int, dtype) -> Dict:
+    H = d // head_dim
+    ks = jax.random.split(key, 12)
+    def w(k, i, o, s=None):
+        return (jax.random.normal(k, (i, o), dtype=jnp.float32)
+                / math.sqrt(s or i)).astype(dtype)
+    def mu(k):
+        return jax.random.uniform(k, (d,), minval=0.0, maxval=1.0).astype(dtype)
+    return {
+        "mu_r": mu(ks[0]), "mu_k": mu(jax.random.fold_in(ks[0], 1)),
+        "mu_v": mu(jax.random.fold_in(ks[0], 2)),
+        "mu_g": mu(jax.random.fold_in(ks[0], 3)),
+        "mu_w": mu(jax.random.fold_in(ks[0], 4)),
+        "w_r": w(ks[1], d, d), "w_k": w(ks[2], d, d), "w_v": w(ks[3], d, d),
+        "w_g": w(ks[4], d, d), "w_o": w(ks[5], d, d),
+        "decay_w0": jnp.full((d,), -1.0, jnp.float32),
+        "decay_a": w(ks[6], d, DECAY_LORA),
+        "decay_b": (jax.random.normal(ks[7], (DECAY_LORA, d), dtype=jnp.float32)
+                    * 0.01).astype(dtype),
+        "bonus_u": (jax.random.normal(ks[8], (H, head_dim), dtype=jnp.float32)
+                    * 0.1).astype(jnp.float32),
+        "ln_out": jnp.ones((d,), dtype),
+        # channel mix
+        "mu_cr": mu(ks[9]), "mu_ck": mu(jax.random.fold_in(ks[9], 1)),
+        "w_cr": w(ks[10], d, d), "w_ck": w(ks[11], d, d_ff),
+        "w_cv": w(jax.random.fold_in(ks[11], 1), d_ff, d),
+    }
+
+
+def rwkv_axes() -> Dict:
+    e, f = "embed", "ffn"
+    return {
+        "mu_r": (e,), "mu_k": (e,), "mu_v": (e,), "mu_g": (e,), "mu_w": (e,),
+        "w_r": (e, "embed_out"), "w_k": (e, "embed_out"), "w_v": (e, "embed_out"),
+        "w_g": (e, "embed_out"), "w_o": ("embed_out", e),
+        "decay_w0": (e,), "decay_a": (e, None), "decay_b": (None, e),
+        "bonus_u": ("heads", None), "ln_out": (e,),
+        "mu_cr": (e,), "mu_ck": (e,),
+        "w_cr": (e, "embed_out"), "w_ck": (e, f), "w_cv": (f, e),
+    }
+
+
+def _group_norm(x: jnp.ndarray, scale: jnp.ndarray, H: int) -> jnp.ndarray:
+    """Per-head LayerNorm on the WKV output. x: (..., D)."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], H, shp[-1] // H).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (xh.reshape(shp) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """Token shift: x_{t-1}, with `prev` (B, D) feeding position 0."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix_seq(params: Dict, x: jnp.ndarray, head_dim: int,
+                 state: Dict, valid=None,
+                 use_kernel: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,S,D); state = {"shift": (B,D), "wkv": (B,H,N,N) fp32}.
+
+    ``valid`` (B,S) masks right padding: pad steps leave the WKV state and
+    shift untouched (k → 0, logw → 0, shift gathered at the last valid pos).
+    """
+    B, S, D = x.shape
+    H = D // head_dim
+    xp = _shift(x, state["shift"])
+    def mix(mu):
+        return x + (xp - x) * mu
+    r = jnp.einsum("bsd,de->bse", mix(params["mu_r"]), params["w_r"])
+    k = jnp.einsum("bsd,de->bse", mix(params["mu_k"]), params["w_k"])
+    v = jnp.einsum("bsd,de->bse", mix(params["mu_v"]), params["w_v"])
+    g = jnp.einsum("bsd,de->bse", mix(params["mu_g"]), params["w_g"])
+    xw = mix(params["mu_w"]).astype(jnp.float32)
+    logw = -jnp.exp(params["decay_w0"]
+                    + jnp.tanh(xw @ params["decay_a"].astype(jnp.float32))
+                    @ params["decay_b"].astype(jnp.float32))
+    if valid is not None:
+        vm = valid[..., None]
+        k = k * vm.astype(k.dtype)
+        logw = logw * vm.astype(logw.dtype)
+    rs = r.reshape(B, S, H, head_dim)
+    ks_ = k.reshape(B, S, H, head_dim)
+    vs = v.reshape(B, S, H, head_dim)
+    ws = logw.reshape(B, S, H, head_dim)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out, wkv_state = kops.wkv6(rs, ks_, vs, ws, params["bonus_u"], state["wkv"])
+    else:
+        out, wkv_state = wkv_chunked(rs, ks_, vs, ws, params["bonus_u"], state["wkv"])
+    out = out.reshape(B, S, D)
+    out = _group_norm(out, params["ln_out"], H) * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", out, params["w_o"])
+    shift = x[:, -1] if valid is None else _last_valid(x, valid)
+    return out, {"shift": shift, "wkv": wkv_state}
+
+
+def _last_valid(x: jnp.ndarray, valid) -> jnp.ndarray:
+    lens = valid.sum(axis=1).astype(jnp.int32)
+    b = jnp.arange(x.shape[0])
+    return x[b, jnp.maximum(lens - 1, 0)]
+
+
+def time_mix_step(params: Dict, x: jnp.ndarray, head_dim: int,
+                  state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One decode token. x: (B, D)."""
+    B, D = x.shape
+    H = D // head_dim
+    xp = state["shift"]
+    def mix(mu):
+        return x + (xp - x) * mu
+    r = mix(params["mu_r"]) @ params["w_r"]
+    k = mix(params["mu_k"]) @ params["w_k"]
+    v = mix(params["mu_v"]) @ params["w_v"]
+    g = mix(params["mu_g"]) @ params["w_g"]
+    xw = mix(params["mu_w"]).astype(jnp.float32)
+    logw = -jnp.exp(params["decay_w0"]
+                    + jnp.tanh(xw @ params["decay_a"].astype(jnp.float32))
+                    @ params["decay_b"].astype(jnp.float32))
+    out, wkv_state = wkv_step(
+        r.reshape(B, H, head_dim), k.reshape(B, H, head_dim),
+        v.reshape(B, H, head_dim), logw.reshape(B, H, head_dim),
+        params["bonus_u"], state["wkv"])
+    out = out.reshape(B, D)
+    out = _group_norm(out, params["ln_out"], H) * jax.nn.silu(g)
+    return out @ params["w_o"], {"shift": x, "wkv": wkv_state}
+
+
+def channel_mix_seq(params: Dict, x: jnp.ndarray, state: jnp.ndarray,
+                    valid=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xp = _shift(x, state)
+    xr = x + (xp - x) * params["mu_cr"]
+    xk = x + (xp - x) * params["mu_ck"]
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["w_cr"]))
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, params["w_ck"])))
+    shift = x[:, -1] if valid is None else _last_valid(x, valid)
+    return rr * jnp.einsum("bsf,fd->bsd", kk, params["w_cv"]), shift
+
+
+def channel_mix_step(params: Dict, x: jnp.ndarray,
+                     state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xp = state
+    xr = x + (xp - x) * params["mu_cr"]
+    xk = x + (xp - x) * params["mu_ck"]
+    rr = jax.nn.sigmoid(xr @ params["w_cr"])
+    kk = jnp.square(jax.nn.relu(xk @ params["w_ck"]))
+    return rr * (kk @ params["w_cv"]), x
+
+
+def init_state(batch: int, d: int, head_dim: int, dtype) -> Dict:
+    H = d // head_dim
+    return {
+        "tm": {"shift": jnp.zeros((batch, d), dtype),
+               "wkv": jnp.zeros((batch, H, head_dim, head_dim), jnp.float32)},
+        "cm": jnp.zeros((batch, d), dtype),
+    }

@@ -1,0 +1,111 @@
+"""Dynamic-batching policies (paper §3.2 "Advanced Features").
+
+The paper's software tier compares TFS and Triton; what actually differs
+between them is the batching policy, which we implement as composable
+strategies over the same engine:
+
+  NoBatching       — every request served alone (the CPU baseline).
+  WindowBatcher    — TFS-style: wait up to ``timeout`` for ``max_batch``;
+                     fires on full batch or timeout of the oldest request.
+  PreferredBatcher — TrIS-style: fire eagerly as soon as any preferred
+                     size is reachable; pad-free, lowest queueing delay.
+
+A policy sees the queue and the clock and decides (batch, fire_time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.serving.workload import Request
+
+
+@dataclasses.dataclass
+class QueuedRequest:
+    request: Request
+    enqueue_s: float
+
+
+class BatchPolicy:
+    name = "base"
+
+    def next_batch(self, queue: List[QueuedRequest], now: float,
+                   server_free_at: float
+                   ) -> Optional[Tuple[List[QueuedRequest], float]]:
+        """Return (requests_to_serve, fire_time) or None to wait."""
+        raise NotImplementedError
+
+    def earliest_fire(self, queue: List[QueuedRequest]) -> Optional[float]:
+        """Next time at which the policy might fire without new arrivals."""
+        return None
+
+
+class NoBatching(BatchPolicy):
+    name = "none"
+
+    def next_batch(self, queue, now, server_free_at):
+        if not queue:
+            return None
+        t = max(now, server_free_at, queue[0].enqueue_s)
+        return [queue[0]], t
+
+
+@dataclasses.dataclass
+class WindowBatcher(BatchPolicy):
+    """TFS-style: fill up to max_batch, or flush on timeout."""
+    max_batch: int = 8
+    timeout_s: float = 0.005
+    name: str = "tfs-window"
+
+    def next_batch(self, queue, now, server_free_at):
+        if not queue:
+            return None
+        t_free = max(now, server_free_at)
+        if len(queue) >= self.max_batch:
+            batch = queue[:self.max_batch]
+            return batch, max(t_free, batch[-1].enqueue_s)
+        deadline = queue[0].enqueue_s + self.timeout_s
+        if t_free >= deadline:
+            return list(queue), t_free
+        return None
+
+    def earliest_fire(self, queue):
+        if not queue:
+            return None
+        return queue[0].enqueue_s + self.timeout_s
+
+
+@dataclasses.dataclass
+class PreferredBatcher(BatchPolicy):
+    """TrIS-style: serve eagerly at the largest reachable preferred size."""
+    preferred: Sequence[int] = (8, 4, 2, 1)
+    max_queue_delay_s: float = 0.002
+    name: str = "tris-preferred"
+
+    def next_batch(self, queue, now, server_free_at):
+        if not queue:
+            return None
+        t_free = max(now, server_free_at)
+        for size in sorted(self.preferred, reverse=True):
+            if len(queue) >= size:
+                batch = queue[:size]
+                return batch, max(t_free, batch[-1].enqueue_s)
+        deadline = queue[0].enqueue_s + self.max_queue_delay_s
+        if t_free >= deadline:      # don't hold a partial batch forever
+            return list(queue[:max(self.preferred)]), t_free
+        return None
+
+    def earliest_fire(self, queue):
+        if not queue:
+            return None
+        return queue[0].enqueue_s + self.max_queue_delay_s
+
+
+def make_policy(name: str, **kw) -> BatchPolicy:
+    if name in ("none", "nobatch"):
+        return NoBatching()
+    if name in ("tfs", "window", "tfs-window"):
+        return WindowBatcher(**kw)
+    if name in ("tris", "preferred", "tris-preferred"):
+        return PreferredBatcher(**kw)
+    raise ValueError(name)

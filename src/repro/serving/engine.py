@@ -1,0 +1,74 @@
+"""Inference engine: jitted prefill / decode steps over any model family.
+
+``make_prefill_fn`` builds the cache *inside* the jit (so the dry-run does
+not need a cache operand) and returns (cache, last-token logits);
+``make_decode_fn`` is the one-token step with the cache donated so XLA
+aliases it in place — the KV cache is read-modify-write, never copied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.registry import build_model
+
+
+def serving_config(cfg: ModelConfig) -> ModelConfig:
+    """Inference variant: bf16 params (or the config's serve dtype)."""
+    return dataclasses.replace(cfg, param_dtype=cfg.serve_param_dtype)
+
+
+def make_prefill_fn(model, max_len: Optional[int] = None) -> Callable:
+    cfg = model.cfg
+
+    def prefill_step(params, tokens, lengths, frames=None, patches=None):
+        B, S = tokens.shape
+        total = S + (patches.shape[1] if patches is not None else 0)
+        cache_len = max_len or total
+        kwargs: Dict[str, Any] = {}
+        if cfg.is_encdec:
+            cache = model.init_cache(B, cache_len, enc_len=frames.shape[1])
+            kwargs["frames"] = frames
+        else:
+            cache = model.init_cache(B, cache_len)
+            if patches is not None:
+                kwargs["prefix_embeds"] = patches
+        return model.prefill(params, cache, tokens, lengths, **kwargs)
+
+    return prefill_step
+
+
+def make_decode_fn(model) -> Callable:
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return decode_step
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_generate_fn(model, steps: int) -> Callable:
+    """prefill + `steps` greedy decode steps, scanned (for smoke/e2e tests)."""
+    prefill = make_prefill_fn(model)
+    decode = make_decode_fn(model)
+
+    def generate(params, tokens, lengths, **kw):
+        cache, logits = prefill(params, tokens, lengths, **kw)
+        nxt = greedy_sample(logits)
+
+        def body(carry, _):
+            cache, tok = carry
+            cache, logits = decode(params, cache, tok)
+            nxt = greedy_sample(logits)
+            return (cache, nxt), nxt
+
+        (cache, _), toks = jax.lax.scan(body, (cache, nxt), None, length=steps)
+        return jnp.concatenate([nxt[:, None], toks.T], axis=1)
+
+    return generate

@@ -1,0 +1,125 @@
+"""Roofline-based batch latency oracle (paper §4.3.1, promoted to the
+simulator's clock).
+
+This container has no TPU, so serving latencies are *derived*, not
+measured: for a (model, batch, context, phase) we compute the three
+roofline terms analytically (same math the dry-run validates against the
+compiled HLO) and take their max plus a fixed launch overhead.  The same
+interface also has a ``measured`` mode that wall-clocks a real jitted step
+on CPU — used for the small canonical models where real execution is
+feasible, exactly mirroring the paper's measured-vs-modeled split.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, Optional
+
+from repro import hw as hw_lib
+from repro.models.config import ModelConfig
+from repro.models.registry import model_flops_per_token
+
+LAUNCH_OVERHEAD_S = 50e-6      # dispatch + DMA warmup per device step
+COLD_START_DISK_BW = 2e9       # bytes/s from checkpoint storage
+COLD_START_CONST_S = 2.0       # runtime + compile cache init
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    cfg: ModelConfig
+    hw: hw_lib.HardwareModel = hw_lib.TPU_V5E
+    chips: int = 1
+    serve_bytes_per_param: float = 2.0     # bf16 weights
+    int8: bool = False
+
+    def __post_init__(self):
+        self.flops_per_token = model_flops_per_token(self.cfg) / 3.0  # fwd
+        # count every param (incl. all experts) for weight traffic
+        from repro.models.registry import build_model, count_params, param_shapes
+        self.n_params = count_params(param_shapes(build_model(self.cfg)))
+        if self.int8:
+            self.serve_bytes_per_param = 1.0
+
+    # ---- analytic per-phase latencies -----------------------------------
+    def _kv_bytes_per_token(self) -> float:
+        cfg = self.cfg
+        kinds = cfg.layer_kinds()
+        n_attn = sum(k.startswith("attn") for k in kinds)
+        return n_attn * 2 * cfg.num_kv_heads * cfg.head_dim * 2.0
+
+    def prefill_latency(self, batch: int, prompt: int) -> float:
+        cfg = self.cfg
+        flops = batch * prompt * self.flops_per_token
+        # quadratic attention term (windowed layers capped at the window)
+        for kind in cfg.layer_kinds():
+            if kind == "attn_global":
+                span = prompt
+            elif kind == "attn_local":
+                span = min(cfg.local_window or prompt, prompt)
+            else:
+                continue
+            flops += 4 * batch * prompt * span * cfg.num_heads * cfg.head_dim / 2
+        weight_bytes = self.n_params * self.serve_bytes_per_param
+        act_bytes = 8 * batch * prompt * cfg.d_model * 2.0 * cfg.num_layers
+        compute_s = flops / (self.chips * self.hw.peak_flops)
+        memory_s = (weight_bytes / self.chips + act_bytes / self.chips) \
+            / self.hw.hbm_bw
+        return max(compute_s, memory_s) + LAUNCH_OVERHEAD_S
+
+    def decode_latency(self, batch: int, context: int) -> float:
+        cfg = self.cfg
+        flops = batch * self.flops_per_token
+        flops += 4 * batch * min(context, 1 << 30) * cfg.num_heads \
+            * cfg.head_dim * sum(k.startswith("attn") for k in cfg.layer_kinds())
+        weight_bytes = self.n_params * self.serve_bytes_per_param
+        kv_bytes = batch * context * self._kv_bytes_per_token()
+        compute_s = flops / (self.chips * self.hw.peak_flops)
+        memory_s = (weight_bytes + kv_bytes) / (self.chips * self.hw.hbm_bw)
+        return max(compute_s, memory_s) + LAUNCH_OVERHEAD_S
+
+    def request_latency(self, batch: int, prompt: int, out_tokens: int) -> float:
+        t = self.prefill_latency(batch, prompt)
+        for i in range(out_tokens - 1):
+            t += self.decode_latency(batch, prompt + i)
+        return t
+
+    def cold_start(self) -> float:
+        weight_bytes = self.n_params * self.serve_bytes_per_param
+        return COLD_START_CONST_S + weight_bytes / (self.chips * COLD_START_DISK_BW)
+
+
+@dataclasses.dataclass
+class MeasuredLatency:
+    """Wall-clock a real jitted callable (CPU-scale models)."""
+    fn: Callable
+    warmup: int = 2
+    iters: int = 5
+
+    def measure(self, *args) -> float:
+        import jax
+        for _ in range(self.warmup):
+            jax.block_until_ready(self.fn(*args))
+        t0 = time.perf_counter()
+        for _ in range(self.iters):
+            jax.block_until_ready(self.fn(*args))
+        return (time.perf_counter() - t0) / self.iters
+
+
+# --- network models for the pipeline tier (paper Fig. 14) ------------------
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    name: str
+    bandwidth_bps: float
+    rtt_s: float
+    jitter_s: float = 0.0
+
+    def transmit(self, payload_bytes: int) -> float:
+        return self.rtt_s + payload_bytes * 8 / self.bandwidth_bps
+
+
+NETWORKS: Dict[str, NetworkModel] = {
+    "lan": NetworkModel("lan", 10e9, 0.0002),
+    "wifi": NetworkModel("wifi", 100e6, 0.004),
+    "4g": NetworkModel("4g", 20e6, 0.045),
+}

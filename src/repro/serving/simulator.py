@@ -1,0 +1,182 @@
+"""Discrete-event simulator of the full inference pipeline (paper Fig. 4):
+
+  client → pre-process → transmission → queue/batch → inference → post.
+
+Drives a batching policy + latency oracle over a workload trace, recording
+per-request stage latencies — the substrate for the tail-latency (Fig. 11),
+dynamic-batching (Fig. 12), utilization (Fig. 13) and pipeline-
+decomposition (Fig. 14) reproductions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro import hw as hw_lib
+from repro.serving.batching import BatchPolicy, QueuedRequest
+from repro.serving.latency_model import (LatencyModel, NetworkModel,
+                                         NETWORKS)
+from repro.serving.workload import Request, WorkloadSpec, generate
+
+PRE_PROCESS_S = 0.0015     # resize + tensorize, per request
+POST_PROCESS_S = 0.0004    # label lookup / detokenize, per request
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    request: Request
+    t_preprocess: float = 0.0
+    t_transmit: float = 0.0
+    t_queue: float = 0.0
+    t_batch_wait: float = 0.0
+    t_inference: float = 0.0
+    t_postprocess: float = 0.0
+    batch_size: int = 1
+    done_s: float = 0.0
+
+    @property
+    def e2e(self) -> float:
+        return (self.t_preprocess + self.t_transmit + self.t_queue
+                + self.t_inference + self.t_postprocess)
+
+
+@dataclasses.dataclass
+class SimResult:
+    traces: List[RequestTrace]
+    busy_s: float
+    duration_s: float
+    hw: hw_lib.HardwareModel
+    chips: int
+
+    # ---- aggregate metrics (the paper's metric collector) ----------------
+    def latencies(self) -> np.ndarray:
+        return np.array([t.e2e for t in self.traces])
+
+    def percentile(self, p: float) -> float:
+        lat = self.latencies()
+        return float(np.percentile(lat, p)) if len(lat) else 0.0
+
+    def throughput(self) -> float:
+        return len(self.traces) / self.duration_s if self.duration_s else 0.0
+
+    def utilization(self) -> float:
+        return self.busy_s / self.duration_s if self.duration_s else 0.0
+
+    def cdf(self, points: int = 50):
+        lat = np.sort(self.latencies())
+        if not len(lat):
+            return [], []
+        qs = np.linspace(0, 1, points)
+        return list(np.quantile(lat, qs)), list(qs)
+
+    def energy_joules(self) -> float:
+        return hw_lib.energy_joules(self.hw, self.duration_s,
+                                    self.utilization()) * self.chips
+
+    def co2_kg(self) -> float:
+        return hw_lib.co2_kg(self.energy_joules())
+
+    def cost_usd(self) -> float:
+        return hw_lib.cloud_cost_usd(self.hw.name, self.duration_s) * self.chips
+
+    def cost_per_1k_requests(self) -> float:
+        n = len(self.traces)
+        return self.cost_usd() / n * 1000 if n else 0.0
+
+    def stage_means(self) -> Dict[str, float]:
+        if not self.traces:
+            return {}
+        return {
+            "preprocess": float(np.mean([t.t_preprocess for t in self.traces])),
+            "transmit": float(np.mean([t.t_transmit for t in self.traces])),
+            "queue": float(np.mean([t.t_queue for t in self.traces])),
+            "inference": float(np.mean([t.t_inference for t in self.traces])),
+            "postprocess": float(np.mean([t.t_postprocess for t in self.traces])),
+        }
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": len(self.traces),
+            "throughput_rps": self.throughput(),
+            "p50_s": self.percentile(50),
+            "p95_s": self.percentile(95),
+            "p99_s": self.percentile(99),
+            "mean_s": float(np.mean(self.latencies())) if self.traces else 0.0,
+            "utilization": self.utilization(),
+            "energy_j": self.energy_joules(),
+            "co2_kg": self.co2_kg(),
+            "cost_usd": self.cost_usd(),
+            "cost_per_1k_req": self.cost_per_1k_requests(),
+        }
+
+
+def simulate(workload: WorkloadSpec, policy: BatchPolicy,
+             latency: LatencyModel, *, network: NetworkModel = NETWORKS["lan"],
+             server_side_processing: bool = True) -> SimResult:
+    """Run the pipeline simulation; returns per-request traces + utilization."""
+    requests = generate(workload)
+    # arrival at the server = client arrival + preprocess + transmission
+    queue: List[QueuedRequest] = []
+    pending: List[Request] = sorted(requests, key=lambda r: r.arrival_s)
+    traces: Dict[int, RequestTrace] = {}
+    arrivals = []
+    for r in pending:
+        tr = RequestTrace(request=r, t_preprocess=PRE_PROCESS_S,
+                          t_transmit=network.transmit(r.payload_bytes))
+        traces[r.req_id] = tr
+        arrivals.append((r.arrival_s + tr.t_preprocess + tr.t_transmit, r))
+    arrivals.sort(key=lambda x: x[0])
+
+    now = 0.0
+    busy = 0.0
+    server_free_at = 0.0
+    i = 0
+    n = len(arrivals)
+    while i < n or queue:
+        # admit every arrival up to `now`
+        while i < n and arrivals[i][0] <= now + 1e-12:
+            t_arr, r = arrivals[i]
+            queue.append(QueuedRequest(request=r, enqueue_s=t_arr))
+            i += 1
+        decision = policy.next_batch(queue, now, server_free_at)
+        if decision is None:
+            # advance time to the next event (arrival or policy timeout)
+            candidates = []
+            if i < n:
+                candidates.append(arrivals[i][0])
+            fire = policy.earliest_fire(queue)
+            if fire is not None:
+                candidates.append(max(fire, server_free_at))
+            if not candidates:
+                break
+            now = max(now, min(candidates))
+            continue
+        batch, fire_t = decision
+        if fire_t > now + 1e-12:
+            now = fire_t
+            continue  # re-admit arrivals before firing
+        # serve the batch
+        ids = {q.request.req_id for q in batch}
+        queue = [q for q in queue if q.request.req_id not in ids]
+        bsz = len(batch)
+        prompt = max(q.request.prompt_tokens for q in batch)
+        out_toks = max(q.request.output_tokens for q in batch)
+        infer_s = latency.request_latency(bsz, prompt, out_toks)
+        start = max(now, server_free_at)
+        server_free_at = start + infer_s
+        busy += infer_s
+        for q in batch:
+            tr = traces[q.request.req_id]
+            tr.t_queue = start - q.enqueue_s
+            tr.t_inference = infer_s
+            tr.t_postprocess = POST_PROCESS_S
+            tr.batch_size = bsz
+            tr.done_s = server_free_at + POST_PROCESS_S
+        now = max(now, start)
+
+    done = [t for t in traces.values() if t.done_s > 0]
+    duration = max((t.done_s for t in done), default=0.0)
+    return SimResult(traces=done, busy_s=busy, duration_s=duration,
+                     hw=latency.hw, chips=latency.chips)

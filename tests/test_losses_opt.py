@@ -1,0 +1,77 @@
+"""Chunked CE exactness + AdamW behaviour + costing helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.launch.costing import depth_variants, extrapolate
+from repro.training.losses import chunked_cross_entropy
+from repro.training.optimizer import (OptimizerConfig, adamw_update,
+                                      init_opt_state, schedule)
+
+
+def test_chunked_ce_matches_full():
+    key = jax.random.key(0)
+    B, S, D, V = 2, 64, 16, 50
+    hidden = jax.random.normal(key, (B, S, D))
+    embed = jax.random.normal(jax.random.fold_in(key, 1), (V, D))
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (B, S), 0, V)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 3), (B, S)) > 0.2
+            ).astype(jnp.float32)
+    full = chunked_cross_entropy(hidden, embed, labels, mask, chunk=S)
+    chunked = chunked_cross_entropy(hidden, embed, labels, mask, chunk=16)
+    unrolled = chunked_cross_entropy(hidden, embed, labels, mask, chunk=16,
+                                     unroll=True)
+    np.testing.assert_allclose(full, chunked, rtol=1e-6)
+    np.testing.assert_allclose(full, unrolled, rtol=1e-6)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = init_opt_state(params)
+    cfg = OptimizerConfig(learning_rate=0.3, warmup_steps=1, total_steps=200,
+                          weight_decay=0.0)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, opt, m = adamw_update(cfg, grads, opt, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+    assert m["grad_norm"] >= 0
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros(4)}
+    opt = init_opt_state(params)
+    cfg = OptimizerConfig(grad_clip_norm=1.0, warmup_steps=1, total_steps=10)
+    _, _, m = adamw_update(cfg, {"w": jnp.full(4, 100.0)}, opt, params)
+    assert float(m["grad_norm"]) > 1.0  # raw norm reported pre-clip
+
+
+def test_schedule_shape():
+    cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10,
+                          total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert lrs[1] == 1.0                      # end of warmup
+    assert lrs[-1] <= 0.11                    # cosine floor
+    assert all(a >= b - 1e-6 for a, b in zip(lrs[1:], lrs[2:]))
+
+
+def test_depth_variants_and_extrapolation():
+    cfg = ARCHS["recurrentgemma-9b"]          # 38 = 12·3 + 2
+    d1, d2, n1, n_full = depth_variants(cfg)
+    assert d1.num_layers == 5 and d2.num_layers == 8
+    assert n1 == 1 and n_full == 12
+    assert d1.cost_unroll and d2.cost_unroll
+    c1 = {"flops": 10.0, "bytes": 100.0, "transcendentals": 0.0,
+          "collectives": {"all-reduce": {"bytes": 4, "count": 1}}}
+    c2 = {"flops": 13.0, "bytes": 130.0, "transcendentals": 0.0,
+          "collectives": {"all-reduce": {"bytes": 6, "count": 2}}}
+    total = extrapolate(c1, c2, n1, n_full)
+    assert total["flops"] == 10.0 + 11 * 3.0
+    assert total["collectives"]["all-reduce"]["bytes"] == 4 + 11 * 2
+
+
+def test_depth_variants_encdec():
+    cfg = ARCHS["whisper-tiny"]
+    d1, d2, n1, n_full = depth_variants(cfg)
+    assert d1.num_layers == d1.encoder_layers == 1
+    assert d2.num_layers == 2 and n_full == 4

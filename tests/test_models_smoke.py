@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
+and one train step on CPU, asserting shapes + finiteness; plus the core
+serving invariant (prefill+decode ≡ teacher-forced forward)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model, count_params, reduced
+from repro.training.optimizer import OptimizerConfig
+from repro.training.step import init_train_state, make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _reduced(name):
+    cfg = reduced(ARCHS[name])
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    return cfg
+
+
+def _example(cfg, B=2, S=64, key=None):
+    key = key or jax.random.key(1)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.is_encdec:
+        kw["frames"] = jax.random.normal(jax.random.fold_in(key, 1),
+                                         (B, 16, cfg.d_model))
+    if cfg.frontend == "vision_patches":
+        kw["prefix_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (B, cfg.num_frontend_tokens, cfg.d_model))
+    return tokens, kw
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_shapes_finite(name):
+    cfg = _reduced(name)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    assert count_params(params) > 0
+    B, S = 2, 64
+    tokens, kw = _example(cfg, B, S)
+    logits, aux = model.forward(params, tokens, **kw)
+    S_total = S + (cfg.num_frontend_tokens
+                   if cfg.frontend == "vision_patches" else 0)
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step_no_nan(name):
+    cfg = _reduced(name)
+    model = build_model(cfg)
+    params, opt = init_train_state(model, jax.random.key(0))
+    B, S = 2, 64
+    tokens, kw = _example(cfg, B, S)
+    batch = {"tokens": tokens,
+             "labels": jnp.roll(tokens, -1, axis=1),
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+    if "frames" in kw:
+        batch["frames"] = kw["frames"]
+    if "prefix_embeds" in kw:
+        batch["patches"] = kw["prefix_embeds"]
+    step = jax.jit(make_train_step(model, OptimizerConfig(warmup_steps=1,
+                                                          total_steps=10)))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert float(metrics["loss"]) > 0
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_matches_forward(name):
+    cfg = _reduced(name)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 64
+    tokens, kw = _example(cfg, B, S)
+    n_front = cfg.num_frontend_tokens if cfg.frontend == "vision_patches" else 0
+    # lengths are in *concatenated* position space (patches + text)
+    lengths = jnp.array([S + n_front - 1, S + n_front - 9], jnp.int32)
+    logits_full, _ = model.forward(params, tokens, **kw)
+    if cfg.is_encdec:
+        cache = model.init_cache(B, S + 8, enc_len=16)
+    else:
+        cache = model.init_cache(B, S + n_front + 8)
+    cache, pre_logits = model.prefill(params, cache, tokens, lengths, **kw)
+    b = jnp.arange(B)
+    want_pre = logits_full[b, lengths - 1]
+    assert float(jnp.max(jnp.abs(pre_logits - want_pre))) < 1e-3
+    next_tok = tokens[b, lengths - n_front]
+    cache, dec_logits = model.decode_step(params, cache, next_tok)
+    want_dec = logits_full[b, lengths]
+    assert float(jnp.max(jnp.abs(dec_logits - want_dec))) < 1e-3
+
+
+def test_long_context_flags():
+    assert ARCHS["rwkv6-7b"].sub_quadratic
+    assert ARCHS["recurrentgemma-9b"].sub_quadratic
+    for name in ("gemma2-2b", "yi-9b", "whisper-tiny", "llava-next-34b"):
+        assert not ARCHS[name].sub_quadratic
+
+
+def test_vlm_prefill_uses_prefix():
+    """VLM decode position accounting includes the image-token prefix."""
+    cfg = _reduced("llava-next-34b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 32
+    tokens, kw = _example(cfg, B, S)
+    n_front = cfg.num_frontend_tokens
+    cache = model.init_cache(B, S + n_front + 4)
+    lengths = jnp.full((B,), S + n_front, jnp.int32)  # all positions valid
+    cache, logits = model.prefill(params, cache, tokens, lengths, **kw)
+    full, _ = model.forward(params, tokens, prefix_embeds=kw["prefix_embeds"])
+    assert float(jnp.max(jnp.abs(logits - full[:, -1]))) < 1e-3

@@ -1,0 +1,103 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import ClusterScheduler, Job, average_jct
+from repro.dist import sharding as shd
+from repro.kernels import ref
+from repro.serving.batching import PreferredBatcher, QueuedRequest, WindowBatcher
+from repro.serving.workload import Request
+from repro.training.compress import dequantize, quantize
+
+from jax.sharding import AbstractMesh
+
+MESH = AbstractMesh((4, 8), ("data", "model"))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=5),
+       st.sampled_from(["embed", "ffn", "heads", "kv", "batch", "vocab"]))
+def test_partition_spec_always_divides(dims, ax):
+    """Whatever the tensor shape, the resolved spec divides every dim."""
+    axes = tuple([ax] + [None] * (len(dims) - 1))
+    spec = shd.partition_spec(tuple(dims), axes, shd.TRAIN_RULES, MESH)
+    sizes = dict(MESH.shape)
+    for dim, entry in zip(dims, list(spec) + [None] * len(dims)):
+        if entry is None:
+            continue
+        shards = np.prod([sizes[a] for a in
+                          ((entry,) if isinstance(entry, str) else entry)])
+        assert dim % shards == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.01, 100.0), min_size=1, max_size=40),
+       st.integers(1, 6))
+def test_sjf_never_worse_than_fcfs_at_t0(procs, workers):
+    """All jobs submitted together: SJF mean JCT ≤ FCFS mean JCT."""
+    jobs = [Job(f"j{i}", 0.0, p) for i, p in enumerate(procs)]
+    fcfs = average_jct(ClusterScheduler(workers, lb="qa", order="fcfs").run(jobs))
+    sjf = average_jct(ClusterScheduler(workers, lb="qa", order="sjf").run(jobs))
+    assert sjf <= fcfs + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quantize_roundtrip_bound(seed):
+    g = jax.random.normal(jax.random.key(seed), (64,)) * \
+        (10.0 ** ((seed % 7) - 3))
+    q, s = quantize(g)
+    err = jnp.max(jnp.abs(dequantize(q, s) - g))
+    assert float(err) <= float(s) * 0.5 + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 8))
+def test_wkv_chunk_invariance(b, nheads):
+    """Chunked WKV must not depend on the chunk size (exactness)."""
+    from repro.models.rwkv6 import wkv_chunked
+    key = jax.random.key(b * 100 + nheads)
+    S, N = 64, 16
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (b, S, nheads, N)) * 0.5
+    k = jax.random.normal(ks[1], (b, S, nheads, N)) * 0.5
+    v = jax.random.normal(ks[2], (b, S, nheads, N))
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, S, nheads, N)) * 0.3)
+    u = jax.random.normal(ks[4], (nheads, N)) * 0.1
+    s0 = jax.random.normal(ks[5], (b, nheads, N, N)) * 0.1
+    o16, f16 = wkv_chunked(r, k, v, lw, u, s0, chunk=16)
+    o32, f32_ = wkv_chunked(r, k, v, lw, u, s0, chunk=32)
+    np.testing.assert_allclose(o16, o32, atol=3e-4, rtol=1e-3)
+    np.testing.assert_allclose(f16, f32_, atol=3e-4, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 16))
+def test_batchers_never_exceed_limits(n_queued, max_batch):
+    q = [QueuedRequest(Request(i, 0.0, 8, 1, 10), 0.0)
+         for i in range(n_queued)]
+    w = WindowBatcher(max_batch=max_batch, timeout_s=0.0)
+    out = w.next_batch(q, now=1.0, server_free_at=0.0)
+    assert out is not None
+    assert 1 <= len(out[0]) <= max(max_batch, n_queued)
+    p = PreferredBatcher(preferred=(max_batch,), max_queue_delay_s=0.0)
+    out2 = p.next_batch(q, now=1.0, server_free_at=0.0)
+    assert out2 is not None and len(out2[0]) <= max(max_batch, 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 4), st.integers(8, 32))
+def test_attention_reference_causality(b, h, s):
+    """Changing future keys never changes past outputs."""
+    key = jax.random.key(s)
+    q = jax.random.normal(key, (b, h, s, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s, 8))
+    out1 = ref.mha_reference(q, k, v, causal=True)
+    k2 = k.at[:, :, -1].set(999.0)
+    v2 = v.at[:, :, -1].set(-999.0)
+    out2 = ref.mha_reference(q, k2, v2, causal=True)
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1],
+                               atol=1e-5, rtol=1e-5)

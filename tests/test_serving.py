@@ -1,0 +1,114 @@
+"""Serving tier: batching policy semantics, simulator conservation laws,
+workload generator statistics."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.batching import (NoBatching, PreferredBatcher,
+                                    QueuedRequest, WindowBatcher)
+from repro.serving.latency_model import LatencyModel, NETWORKS
+from repro.serving.simulator import simulate
+from repro.serving.workload import POISSON, Request, WorkloadSpec, generate
+
+
+def _q(i, t):
+    return QueuedRequest(Request(i, t, 64, 1, 1000), t)
+
+
+class TestPolicies:
+    def test_window_waits_below_batch(self):
+        p = WindowBatcher(max_batch=4, timeout_s=0.01)
+        q = [_q(0, 0.0)]
+        assert p.next_batch(q, now=0.001, server_free_at=0.0) is None
+        batch, t = p.next_batch(q, now=0.02, server_free_at=0.0)
+        assert len(batch) == 1 and t >= 0.01
+
+    def test_window_fires_on_full(self):
+        p = WindowBatcher(max_batch=2, timeout_s=10.0)
+        q = [_q(0, 0.0), _q(1, 0.0), _q(2, 0.0)]
+        batch, _ = p.next_batch(q, now=0.0, server_free_at=0.0)
+        assert len(batch) == 2
+
+    def test_preferred_is_eager(self):
+        p = PreferredBatcher(preferred=(4, 2, 1))
+        q = [_q(0, 0.0), _q(1, 0.0), _q(2, 0.0)]
+        batch, _ = p.next_batch(q, now=0.0, server_free_at=0.0)
+        assert len(batch) == 2          # largest reachable preferred size
+
+    def test_nobatch_single(self):
+        p = NoBatching()
+        q = [_q(0, 0.0), _q(1, 0.0)]
+        batch, _ = p.next_batch(q, now=0.0, server_free_at=0.0)
+        assert len(batch) == 1
+
+
+class TestWorkload:
+    def test_poisson_rate(self):
+        spec = WorkloadSpec(kind=POISSON, rate=200, duration_s=50, seed=0)
+        reqs = generate(spec)
+        assert abs(len(reqs) / 50 - 200) / 200 < 0.05
+        assert all(0 <= r.arrival_s < 50 for r in reqs)
+
+    def test_deterministic(self):
+        a = generate(WorkloadSpec(rate=50, duration_s=5, seed=3))
+        b = generate(WorkloadSpec(rate=50, duration_s=5, seed=3))
+        assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+
+
+class TestSimulator:
+    def setup_method(self):
+        self.lat = LatencyModel(get_config("gemma2-2b"), chips=4)
+
+    @pytest.mark.parametrize("policy", [
+        NoBatching(), WindowBatcher(max_batch=8, timeout_s=0.005),
+        PreferredBatcher(preferred=(8, 4, 2, 1))])
+    def test_conservation(self, policy):
+        wl = WorkloadSpec(rate=100, duration_s=5, seed=1)
+        res = simulate(wl, policy, self.lat)
+        assert len(res.traces) == len(generate(wl))     # all served once
+        assert 0.0 <= res.utilization() <= 1.0
+        for t in res.traces:
+            assert t.t_queue >= -1e-9 and t.t_inference > 0
+
+    def test_tail_latency_grows_with_rate(self):
+        p99 = []
+        for rate in (50, 2000, 8000):
+            res = simulate(WorkloadSpec(rate=rate, duration_s=3, seed=2),
+                           WindowBatcher(max_batch=8, timeout_s=0.002),
+                           self.lat)
+            p99.append(res.percentile(99))
+        assert p99[0] <= p99[-1]        # saturation raises the tail
+
+    def test_network_scenarios_ordered(self):
+        lat = {}
+        for name in ("lan", "wifi", "4g"):
+            res = simulate(WorkloadSpec(rate=20, duration_s=3, seed=4),
+                           NoBatching(), self.lat, network=NETWORKS[name])
+            lat[name] = res.stage_means()["transmit"]
+        assert lat["lan"] < lat["wifi"] < lat["4g"]      # paper Fig. 14b
+
+    def test_energy_cost_positive(self):
+        res = simulate(WorkloadSpec(rate=50, duration_s=3, seed=5),
+                       NoBatching(), self.lat)
+        s = res.summary()
+        assert s["energy_j"] > 0 and s["cost_usd"] > 0 and s["co2_kg"] > 0
+
+
+class TestLatencyModel:
+    def test_decode_memory_bound_long_context(self):
+        lm = LatencyModel(get_config("yi-9b"), chips=8)
+        short = lm.decode_latency(8, 1024)
+        long = lm.decode_latency(8, 131072)
+        assert long > short                    # KV streaming dominates
+
+    def test_int8_halves_weight_traffic(self):
+        cfg = get_config("granite-8b")
+        t16 = LatencyModel(cfg, chips=8).decode_latency(1, 128)
+        t8 = LatencyModel(cfg, chips=8, int8=True).decode_latency(1, 128)
+        assert t8 < t16
+
+    def test_batch_amortizes_weights(self):
+        lm = LatencyModel(get_config("granite-8b"), chips=8)
+        t1 = lm.decode_latency(1, 1024)
+        t32 = lm.decode_latency(32, 1024)
+        assert t32 < 32 * t1                  # throughput wins with batch

@@ -1,0 +1,73 @@
+"""Logical-axis sharding rules: divisibility fallback, duplicate-axis
+avoidance, per-device byte accounting.  Uses AbstractMesh so no devices
+are needed."""
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+MESH1 = AbstractMesh((16, 16), ("data", "model"))
+MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def spec(shape, axes, rules=None, mesh=MESH1):
+    return shd.partition_spec(shape, axes, rules or shd.TRAIN_RULES, mesh)
+
+
+def test_basic_tp():
+    assert spec((4096, 14336), ("embed", "ffn")) == P("data", "model")
+
+
+def test_divisibility_fallback_drops_axis():
+    # 4 kv heads can't shard over 16-way model → replicated
+    assert spec((2048, 4, 128), ("embed", "kv_heads", "head_dim")) \
+        == P("data",)
+    # whisper vocab 51865 % 16 != 0 → vocab dropped, embed keeps data
+    assert spec((51865, 384), ("vocab", "embed")) == P(None, "data")
+
+
+def test_duplicate_axis_avoided():
+    # both dims want "model": only the first gets it
+    s = spec((1024, 1024), ("ffn", "embed_out"))
+    flat = [a for a in s if a is not None]
+    assert flat.count("model") <= 1
+
+
+def test_multi_axis_batch():
+    assert spec((256, 4096), ("batch", "seq"), mesh=MESH2) \
+        == P(("pod", "data"),)
+    # missing pod axis on single-pod mesh → just data
+    assert spec((256, 4096), ("batch", "seq"), mesh=MESH1) == P("data",)
+    # batch=1 long-context decode → fully replicated
+    assert spec((1,), ("batch",), mesh=MESH1) == P()
+
+
+def test_kv_cache_seq_sharding():
+    s = spec((26, 128, 32768, 4, 256),
+             ("layers", "batch", "kv", "kv_heads", "head_dim"))
+    assert s == P(None, "data", "model")
+
+
+def test_tree_specs_and_bytes():
+    shapes = {"w": jax.ShapeDtypeStruct((4096, 14336), jax.numpy.float32),
+              "b": jax.ShapeDtypeStruct((14336,), jax.numpy.float32)}
+    axes = {"w": ("embed", "ffn"), "b": ("ffn",)}
+    specs = shd.tree_partition_specs(shapes, axes, shd.TRAIN_RULES, MESH1)
+    assert specs["w"] == P("data", "model")
+    per_dev = shd.bytes_per_device(shapes, specs, MESH1)
+    # w: 4096·14336·4/256, b: 14336·4/16
+    assert per_dev == (4096 * 14336 * 4) // 256 + (14336 * 4) // 16
+
+
+def test_rules_variants():
+    assert shd.SERVE_TP_RULES["embed"] == []
+    assert shd.MOE_EP_RULES["expert"] == ["model"]
+    s = shd.partition_spec((16, 6144, 10752), ("expert", "embed", "ffn"),
+                           shd.MOE_EP_RULES, MESH1)
+    assert s == P("model", "data")
+
+
+def test_rank_mismatch_raises():
+    with pytest.raises(ValueError):
+        spec((4, 4), ("embed",))

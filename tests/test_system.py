@@ -1,0 +1,97 @@
+"""End-to-end behaviour tests for the benchmark system (paper workflow):
+submit a config → leader schedules → followers execute the 4 stages →
+PerfDB → analysis; plus real-execution serving and training smoke."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.core import (BenchmarkJobSpec, Leader, ModelRef, PerfDB,
+                        SoftwareSpec, SweepSpec)
+from repro.core.analysis import recommend
+from repro.models import build_model, reduced
+from repro.serving.batching import make_policy
+from repro.serving.workload import WorkloadSpec
+
+
+def test_full_benchmark_workflow(tmp_path):
+    """The paper's end-to-end path: config file → report."""
+    db = PerfDB(str(tmp_path / "db.jsonl"))
+    leader = Leader(n_workers=2, db=db, lb="qa", order="sjf")
+    base = BenchmarkJobSpec(
+        job_id="workflow", model=ModelRef(name="gemma2-2b"), chips=8,
+        slo_latency_s=0.05,
+        workload=WorkloadSpec(rate=100, duration_s=2, seed=0))
+    sweep = SweepSpec(base, axes={
+        "software.policy": ["none", "tfs", "tris"],
+        "chips": [4, 8],
+    })
+    for s in sweep.expand():
+        leader.submit(s)
+    recs = leader.run_all()
+    assert len(recs) == 6
+    # every record has the full metric set + scheduling metadata
+    for r in recs:
+        assert r["result"]["throughput_rps"] > 0
+        assert r["sched"]["jct_s"] > 0
+    # stage 4: recommendation under the SLO
+    top = recommend(db, slo_latency_s=0.05)
+    assert top, "no configuration met the SLO"
+    assert top[0]["result"]["p99_s"] <= 0.05
+
+
+def test_real_execution_serving_small_model():
+    """Actual jitted prefill+decode behind the batcher (CPU-scale)."""
+    from repro.launch.serve import run_server
+    cfg = reduced(get_config("granite-3-2b"))
+    out = run_server(cfg, make_policy("tris", preferred=(4, 2, 1)),
+                     WorkloadSpec(rate=50, duration_s=1.0, prompt_tokens=16,
+                                  seed=0),
+                     max_len=64, decode_steps=4)
+    assert out["requests"] > 10
+    assert out["p99_s"] > 0 and out["mean_infer_s"] > 0
+
+
+def test_generate_fn_greedy_decode():
+    """prefill → N greedy decode steps returns N+1 tokens per sequence."""
+    from repro.serving.engine import make_generate_fn
+    cfg = reduced(get_config("rwkv6-7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    gen = jax.jit(make_generate_fn(model, steps=4))
+    tokens = jnp.ones((2, 32), jnp.int32)
+    lengths = jnp.full((2,), 32, jnp.int32)
+    out = gen(params, tokens, lengths)
+    assert out.shape == (2, 5)
+    assert bool((out >= 0).all()) and bool((out < cfg.vocab_size).all())
+
+
+def test_training_runner_end_to_end(tmp_path):
+    """A few real optimizer steps with checkpoint + restart recovery."""
+    from repro.training.data import DataConfig, host_batch
+    from repro.training.ft import RunnerConfig, TrainingRunner
+    from repro.training.optimizer import OptimizerConfig
+    from repro.training.step import init_train_state, make_train_step
+
+    cfg = reduced(get_config("granite-3-2b"))
+    model = build_model(cfg)
+    step_raw = jax.jit(make_train_step(
+        model, OptimizerConfig(warmup_steps=1, total_steps=10)))
+    data_cfg = DataConfig(global_batch=2, seq_len=32)
+
+    def init_state():
+        p, o = init_train_state(model, jax.random.key(0))
+        return {"p": p, "o": o}
+
+    def step_fn(state, step):
+        batch = host_batch(data_cfg, cfg, step)
+        p, o, m = step_raw(state["p"], state["o"], batch)
+        return {"p": p, "o": o}, {k: float(v) for k, v in m.items()}
+
+    runner = TrainingRunner(
+        RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=3, max_steps=8,
+                     fail_at_step=5, async_ckpt=False),
+        step_fn, init_state)
+    out = runner.run()
+    assert out["final_step"] == 8
+    assert out["restarts"] == 1
+    assert all(m["loss"] > 0 for m in out["metrics"])
