@@ -1,31 +1,60 @@
 """Paper Fig. 7 — latency & throughput vs batch size across hardware,
-plus the GPU(TPU)/CPU speedup-under-SLO table."""
+plus the GPU(TPU)/CPU speedup-under-SLO table.
+
+Each (model, hardware, batch) point is a declarative ``BenchmarkJobSpec``
+with a closed-loop workload of ``batch`` clients and a batching policy
+pinned to that batch size, executed through a ``BenchmarkSession`` with
+concurrent followers; the per-batch inference latency is read off the
+typed ``JobResult`` stage breakdown.
+"""
 from __future__ import annotations
 
-from repro import hw as hw_lib
-from repro.configs import get_config
-from repro.serving.latency_model import LatencyModel
+from repro.core import (BenchmarkJobSpec, BenchmarkSession,
+                        ConcurrentFollowerExecutor, ModelRef, SoftwareSpec)
+from repro.serving.workload import WorkloadSpec
 
-from benchmarks.common import emit, save_json, timed
+from benchmarks.common import emit, save_json
 
 MODELS = ("granite-8b", "gemma2-2b")          # BERT-Large / ResNet50 analogs
 HW = ("tpu-v5e", "v100", "t4", "p4", "cpu-xeon")
 BATCHES = (1, 2, 4, 8, 16, 32, 64)
 PROMPT = 128
+DURATION_S = 0.25
+
+
+def _spec(model: str, hw_name: str, b: int) -> BenchmarkJobSpec:
+    return BenchmarkJobSpec(
+        job_id=f"fig7-{model}-{hw_name}-b{b}",
+        model=ModelRef(name=model),
+        hardware=hw_name,
+        chips=1,
+        software=(SoftwareSpec(policy="none") if b == 1
+                  else SoftwareSpec(policy="tris", preferred=(b,))),
+        workload=WorkloadSpec(kind="closed", concurrency=b,
+                              duration_s=DURATION_S, prompt_tokens=PROMPT),
+    )
 
 
 def run() -> None:
-    table = {}
+    session = BenchmarkSession(n_workers=4,
+                               executor=ConcurrentFollowerExecutor())
+    handles = {}
     for model in MODELS:
-        cfg = get_config(model)
         for hw_name in HW:
-            lm = LatencyModel(cfg, hw=hw_lib.HARDWARE[hw_name], chips=1)
             for b in (BATCHES if hw_name != "cpu-xeon" else (1,)):
-                (lat, us) = timed(lm.prefill_latency, b, PROMPT)
-                table[f"{model}/{hw_name}/b{b}"] = {
-                    "latency_s": lat, "throughput_rps": b / lat}
-                emit(f"fig7.latency.{model}.{hw_name}.b{b}", us,
-                     f"latency_ms={lat*1e3:.3f};thr={b/lat:.1f}rps")
+                h = session.submit(_spec(model, hw_name, b))
+                handles[(model, hw_name, b)] = h
+    session.run()
+
+    table = {}
+    for (model, hw_name, b), h in handles.items():
+        res = h.result()
+        lat = res.stages.inference
+        table[f"{model}/{hw_name}/b{b}"] = {
+            "latency_s": lat, "throughput_rps": b / lat,
+            "closed_loop_rps": res.metric("throughput_rps")}
+        emit(f"fig7.latency.{model}.{hw_name}.b{b}", lat * 1e6,
+             f"latency_ms={lat*1e3:.3f};thr={b/lat:.1f}rps")
     # speedup under the CPU-latency SLO (paper Fig. 7c)
     for model in MODELS:
         cpu = table[f"{model}/cpu-xeon/b1"]["latency_s"]

@@ -2,28 +2,42 @@
 dynamic batcher on CPU, comparing the three batching policies under the
 same Poisson workload (the CPU-scale twin of the paper's Fig. 11d/12).
 
+The policies and the workload are declared once as ``BenchmarkJobSpec``s
+(the same spec objects a ``BenchmarkSession`` schedules) and resolved into
+runnable policies via ``resolve_policy``.
+
     PYTHONPATH=src python examples/serve_benchmark.py
 """
 from repro.configs import get_config
+from repro.core import BenchmarkJobSpec, ModelRef, SweepSpec, resolve_policy
 from repro.launch.serve import run_server
 from repro.models import reduced
-from repro.serving.batching import make_policy
 from repro.serving.workload import WorkloadSpec
 
 cfg = reduced(get_config("gemma2-2b"))
-wl = WorkloadSpec(rate=40, duration_s=4.0, prompt_tokens=32, seed=0)
 
-print(f"serving {cfg.name} (real execution, {wl.rate} req/s Poisson)\n")
+base = BenchmarkJobSpec(
+    job_id="serve-real",
+    model=ModelRef(name="gemma2-2b"),
+    workload=WorkloadSpec(rate=40, duration_s=4.0, prompt_tokens=32, seed=0),
+)
+sweep = SweepSpec(base, axes={
+    "software.policy": ["none", "tfs", "tris"],
+    "software.max_batch": [8],
+    "software.timeout_s": [0.02],
+    "software.preferred": [(8, 4, 2, 1)],
+})
+
+print(f"serving {cfg.name} (real execution, {base.workload.rate} req/s "
+      "Poisson)\n")
 print(f"{'policy':14s} {'requests':>9} {'thr rps':>9} {'p50 ms':>9} "
       f"{'p99 ms':>9} {'avg batch':>10}")
-for name, policy in [
-        ("no-batching", make_policy("none")),
-        ("tfs-window", make_policy("tfs", max_batch=8, timeout_s=0.02)),
-        ("tris-preferred", make_policy("tris", preferred=(8, 4, 2, 1)))]:
-    out = run_server(cfg, policy, wl, max_len=64, decode_steps=4)
-    print(f"{name:14s} {out['requests']:9d} {out['throughput_rps']:9.1f} "
-          f"{out['p50_s']*1e3:9.2f} {out['p99_s']*1e3:9.2f} "
-          f"{out['mean_batch']:10.2f}")
+for spec in sweep.expand():
+    policy = resolve_policy(spec.software)
+    out = run_server(cfg, policy, spec.workload, max_len=64, decode_steps=4)
+    print(f"{policy.name:14s} {out['requests']:9d} "
+          f"{out['throughput_rps']:9.1f} {out['p50_s']*1e3:9.2f} "
+          f"{out['p99_s']*1e3:9.2f} {out['mean_batch']:10.2f}")
 print("\nNote the paper's finding: the TFS-style window batcher trades "
       "latency for batch size;\nthe TrIS-style eager batcher keeps p50 low "
       "at light load.")

@@ -1,8 +1,17 @@
-from repro.core.leader import Leader, execute_job
+from repro.core.leader import Leader
 from repro.core.perfdb import PerfDB
+from repro.core.results import JobResult, ScheduleInfo, StageBreakdown
 from repro.core.scheduler import ClusterScheduler, evaluate_schedulers
-from repro.core.spec import BenchmarkJobSpec, ModelRef, SoftwareSpec, SweepSpec
+from repro.core.session import (BenchmarkSession, ConcurrentFollowerExecutor,
+                                Executor, Follower, InlineExecutor, JobHandle,
+                                execute_job, resolve_policy, run_stages)
+from repro.core.spec import (BenchmarkJobSpec, ModelRef, SoftwareSpec,
+                             SweepSpec, load_jobs)
 
-__all__ = ["Leader", "execute_job", "PerfDB", "ClusterScheduler",
-           "evaluate_schedulers", "BenchmarkJobSpec", "ModelRef",
-           "SoftwareSpec", "SweepSpec"]
+__all__ = [
+    "BenchmarkSession", "ConcurrentFollowerExecutor", "Executor", "Follower",
+    "InlineExecutor", "JobHandle", "execute_job", "resolve_policy",
+    "run_stages", "JobResult", "ScheduleInfo", "StageBreakdown", "Leader",
+    "PerfDB", "ClusterScheduler", "evaluate_schedulers", "BenchmarkJobSpec",
+    "ModelRef", "SoftwareSpec", "SweepSpec", "load_jobs",
+]

@@ -1,134 +1,57 @@
-"""Leader/follower benchmark orchestration (paper §4.1, Fig. 1 & 5).
+"""Deprecated leader/follower entry point (paper §4.1, Fig. 1 & 5).
 
-The leader accepts job submissions, places them on follower workers via the
-two-tier scheduler, and drives each job through the four stages:
-
-  1 Generate — resolve the model (registered arch or canonical generated
-               model) + workload trace,
-  2 Serve    — run the serving pipeline (simulator clocked by the roofline
-               latency oracle, or real CPU execution for generated models),
-  3 Collect  — per-stage latencies, utilization, energy/cost,
-  4 Analyze  — aggregate into PerfDB; recommender/leaderboard read from it.
-
-On a real cluster the followers are processes on idle nodes; here they are
-simulated workers with the same queueing semantics (the scheduler, the
-stage pipeline and the PerfDB schema are the production artifacts).
+The orchestration now lives in :mod:`repro.core.session` — submissions go
+through ``BenchmarkSession`` and a pluggable ``Executor``, and results are
+typed ``JobResult`` objects.  This module keeps the old ``Leader.submit()``
++ ``run_all()`` surface (untyped PerfDB record dicts) as a thin shim so
+existing scripts keep working for one release.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 from typing import Any, Dict, List, Optional
 
-from repro.configs import ARCHS, get_config
-from repro.core import generator as gen_lib
 from repro.core.perfdb import PerfDB
-from repro.core.scheduler import ClusterScheduler, Job, ScheduledJob
-from repro.core.spec import BenchmarkJobSpec
-from repro import hw as hw_lib
-from repro.serving.batching import make_policy
-from repro.serving.latency_model import (LatencyModel, MeasuredLatency,
-                                         NETWORKS)
-from repro.serving.simulator import simulate
+from repro.core.session import (BenchmarkSession, Follower, InlineExecutor,
+                                execute_job)
 
-
-def _resolve_policy(spec: BenchmarkJobSpec):
-    sw = spec.software
-    if sw.policy in ("none", "nobatch"):
-        return make_policy("none")
-    if sw.policy in ("tfs", "window"):
-        return make_policy("tfs", max_batch=sw.max_batch,
-                           timeout_s=sw.timeout_s)
-    return make_policy("tris", preferred=tuple(sw.preferred))
-
-
-def execute_job(spec: BenchmarkJobSpec) -> Dict[str, Any]:
-    """Stages 1–3 for one job; returns the PerfDB record."""
-    t0 = time.time()
-    hwm = hw_lib.HARDWARE[spec.hardware]
-    record: Dict[str, Any] = {
-        "job_id": spec.job_id,
-        "user": spec.user,
-        "arch": spec.model.name,
-        "hardware": spec.hardware,
-        "chips": spec.chips,
-        "policy": spec.software.policy,
-        "network": spec.network,
-        "spec": spec.to_dict(),
-    }
-
-    if spec.model.kind == "generated":
-        gspec = gen_lib.GeneratedSpec(
-            family=spec.model.family, layers=spec.model.layers,
-            width=spec.model.width, batch=spec.model.batch_hint)
-        import jax
-        params, apply_fn, inputs = gen_lib.build(gspec)
-        jitted = jax.jit(apply_fn)
-        measured = MeasuredLatency(jitted).measure(params, *inputs)
-        flops = gspec.batch * gen_lib.flops_estimate(gspec)
-        bytes_moved = gen_lib.param_bytes(params) + sum(
-            float(x.size * x.dtype.itemsize) for x in inputs)
-        record["generated"] = dataclasses.asdict(gspec)
-        record["result"] = {
-            "latency_s": measured,
-            "throughput_rps": gspec.batch / measured,
-            "flops": flops,
-            "bytes": bytes_moved,
-            "intensity": flops / max(bytes_moved, 1.0),
-            "attained_flops": flops / measured,
-            "mode": "measured-cpu",
-        }
-    else:
-        cfg = get_config(spec.model.name)
-        lat = LatencyModel(cfg, hw=hwm, chips=spec.chips,
-                           int8=spec.software.int8)
-        policy = _resolve_policy(spec)
-        res = simulate(spec.workload, policy, lat,
-                       network=NETWORKS[spec.network])
-        record["result"] = dict(res.summary(), mode="roofline-model")
-        record["stages"] = res.stage_means()
-        record["cold_start_s"] = lat.cold_start()
-
-    record["benchmark_wall_s"] = time.time() - t0
-    return record
-
-
-@dataclasses.dataclass
-class Follower:
-    worker_id: int
-    busy_until: float = 0.0
-    executed: int = 0
+__all__ = ["Leader", "Follower", "execute_job"]
 
 
 class Leader:
-    """Accepts submissions, schedules, executes, stores (paper Fig. 5)."""
+    """Deprecated: use ``repro.core.session.BenchmarkSession``.
+
+    One behavior change vs the old Leader: duplicate pending ``job_id``s
+    are now rejected with ``ValueError`` (the old path silently executed
+    both submissions against the last-registered spec, double-writing
+    the PerfDB under one id). Give repeated trials distinct job ids.
+    """
 
     def __init__(self, n_workers: int = 4, db: Optional[PerfDB] = None,
                  lb: str = "qa", order: str = "sjf"):
-        self.db = db if db is not None else PerfDB()
-        self.workers = [Follower(i) for i in range(n_workers)]
-        self.scheduler = ClusterScheduler(n_workers, lb=lb, order=order)
-        self._submissions: List[BenchmarkJobSpec] = []
+        warnings.warn(
+            "repro.core.leader.Leader is deprecated; use "
+            "repro.core.session.BenchmarkSession instead",
+            DeprecationWarning, stacklevel=2)
+        self._session = BenchmarkSession(n_workers=n_workers, db=db,
+                                         lb=lb, order=order,
+                                         executor=InlineExecutor())
 
-    def submit(self, spec: BenchmarkJobSpec) -> None:
-        self._submissions.append(spec)
+    @property
+    def db(self) -> PerfDB:
+        return self._session.db
+
+    @property
+    def workers(self) -> List[Follower]:
+        return self._session.followers
+
+    @property
+    def scheduler(self):
+        return self._session.scheduler
+
+    def submit(self, spec) -> None:
+        self._session.submit(spec)
 
     def run_all(self) -> List[Dict[str, Any]]:
-        """Schedule all queued submissions and execute them in order."""
-        jobs = [Job(job_id=s.job_id, submit_s=float(i),
-                    processing_s=s.est_processing_s)
-                for i, s in enumerate(self._submissions)]
-        schedule = self.scheduler.run(jobs)
-        order = {s.job.job_id: s for s in schedule}
-        specs = {s.job_id: s for s in self._submissions}
-        results = []
-        for sj in sorted(schedule, key=lambda s: s.start_s):
-            spec = specs[sj.job.job_id]
-            rec = execute_job(spec)
-            rec["sched"] = {"worker": sj.worker, "start_s": sj.start_s,
-                            "finish_s": sj.finish_s, "jct_s": sj.jct}
-            self.workers[sj.worker].executed += 1
-            self.db.insert(rec)
-            results.append(rec)
-        self._submissions.clear()
-        return results
+        """Schedule and execute all queued submissions; returns records."""
+        return [r.to_record() for r in self._session.run()]

@@ -1,0 +1,128 @@
+"""Typed benchmark results (paper §4.2.5 — the PerfDB record schema).
+
+``JobResult`` is the frozen, typed view of one benchmark outcome.  It
+serializes to exactly the PerfDB JSONL record layout the repo has always
+written (``to_record``) and parses back losslessly (``from_record``), so
+the storage schema and every existing analysis/leaderboard consumer are
+unchanged — only the in-process representation is now structured.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional
+
+from repro.core.spec import BenchmarkJobSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class StageBreakdown:
+    """Mean per-request latency of each pipeline stage (paper Fig. 14)."""
+    preprocess: float = 0.0
+    transmit: float = 0.0
+    queue: float = 0.0
+    inference: float = 0.0
+    postprocess: float = 0.0
+
+    def total(self) -> float:
+        return (self.preprocess + self.transmit + self.queue
+                + self.inference + self.postprocess)
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, float]) -> "StageBreakdown":
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleInfo:
+    """Where/when the two-tier scheduler placed the job (paper §4.3.2)."""
+    worker: int
+    start_s: float
+    finish_s: float
+    jct_s: float
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, float]) -> "ScheduleInfo":
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class JobResult:
+    """One executed benchmark job: spec + metrics + provenance.
+
+    ``metrics`` holds the mode-dependent measurement dict (the record's
+    ``result`` field: throughput/percentiles/cost for simulated serving,
+    roofline numbers for generated models); treat it as read-only.
+    """
+    spec: BenchmarkJobSpec
+    metrics: Dict[str, Any]
+    stages: Optional[StageBreakdown] = None
+    cold_start_s: Optional[float] = None
+    generated: Optional[Dict[str, Any]] = None
+    schedule: Optional[ScheduleInfo] = None
+    benchmark_wall_s: float = 0.0
+    ts: Optional[float] = None
+
+    # ---- convenience accessors -------------------------------------------
+    @property
+    def job_id(self) -> str:
+        return self.spec.job_id
+
+    @property
+    def mode(self) -> str:
+        return str(self.metrics.get("mode", "unknown"))
+
+    def metric(self, key: str, default: float = float("nan")) -> float:
+        return self.metrics.get(key, default)
+
+    def with_schedule(self, schedule: ScheduleInfo) -> "JobResult":
+        return dataclasses.replace(self, schedule=schedule)
+
+    # ---- PerfDB JSONL schema ---------------------------------------------
+    def to_record(self) -> Dict[str, Any]:
+        """The flat PerfDB record (unchanged legacy schema)."""
+        spec = self.spec
+        rec: Dict[str, Any] = {
+            "job_id": spec.job_id,
+            "user": spec.user,
+            "arch": spec.model.name,
+            "hardware": spec.hardware,
+            "chips": spec.chips,
+            "policy": spec.software.policy,
+            "network": spec.network,
+            "spec": spec.to_dict(),
+        }
+        if self.generated is not None:
+            rec["generated"] = dict(self.generated)
+        rec["result"] = dict(self.metrics)
+        if self.stages is not None:
+            rec["stages"] = self.stages.to_dict()
+        if self.cold_start_s is not None:
+            rec["cold_start_s"] = self.cold_start_s
+        rec["benchmark_wall_s"] = self.benchmark_wall_s
+        if self.schedule is not None:
+            rec["sched"] = self.schedule.to_dict()
+        if self.ts is not None:
+            rec["ts"] = self.ts
+        return rec
+
+    @classmethod
+    def from_record(cls, rec: Mapping[str, Any]) -> "JobResult":
+        return cls(
+            spec=BenchmarkJobSpec.from_dict(rec["spec"]),
+            metrics=dict(rec.get("result", {})),
+            stages=(StageBreakdown.from_dict(rec["stages"])
+                    if "stages" in rec else None),
+            cold_start_s=rec.get("cold_start_s"),
+            generated=(dict(rec["generated"])
+                       if rec.get("generated") is not None else None),
+            schedule=(ScheduleInfo.from_dict(rec["sched"])
+                      if "sched" in rec else None),
+            benchmark_wall_s=rec.get("benchmark_wall_s", 0.0),
+            ts=rec.get("ts"),
+        )

@@ -11,9 +11,32 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import json
-from typing import Any, Dict, Iterator, List, Optional, Sequence
+from pathlib import Path
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 
 from repro.serving.workload import WorkloadSpec
+
+
+def _load_config_data(path: Union[str, Path]) -> Dict[str, Any]:
+    """Parse a JSON or TOML config file into a plain dict."""
+    path = Path(path)
+    suffix = path.suffix.lower()
+    if suffix == ".toml":
+        try:
+            import tomllib
+        except ImportError:
+            try:
+                import tomli as tomllib  # type: ignore[no-redef]
+            except ImportError as e:  # pragma: no cover - env without tomli
+                raise RuntimeError(
+                    "TOML configs need Python 3.11+ (tomllib) or the tomli "
+                    f"package; rewrite {path} as JSON instead") from e
+        with path.open("rb") as f:
+            return tomllib.load(f)
+    if suffix == ".json":
+        return json.loads(path.read_text())
+    raise ValueError(f"unsupported config format {suffix!r} for {path} "
+                     "(expected .json or .toml)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,9 +93,22 @@ class BenchmarkJobSpec:
             d["metrics"] = tuple(d["metrics"])
         return cls(**d)
 
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
     @classmethod
     def from_json(cls, text: str) -> "BenchmarkJobSpec":
         return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def from_file(cls, path: Union[str, Path]) -> "BenchmarkJobSpec":
+        """One job from a JSON/TOML file (use ``load_jobs`` for sweeps)."""
+        data = _load_config_data(path)
+        if "base" in data or "jobs" in data:
+            raise ValueError(
+                f"{path} holds a sweep/job-list config; load it with "
+                "repro.core.spec.load_jobs or BenchmarkSession.submit_file")
+        return cls.from_dict(data)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +116,20 @@ class SweepSpec:
     """Cross-product expansion (the paper's automatic iteration)."""
     base: BenchmarkJobSpec
     axes: Dict[str, List[Any]] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"base": self.base.to_dict(), "axes": dict(self.axes)}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SweepSpec":
+        base = d["base"]
+        if isinstance(base, dict):
+            base = BenchmarkJobSpec.from_dict(base)
+        return cls(base=base, axes=dict(d.get("axes", {})))
+
+    @classmethod
+    def from_file(cls, path: Union[str, Path]) -> "SweepSpec":
+        return cls.from_dict(_load_config_data(path))
 
     def expand(self) -> Iterator[BenchmarkJobSpec]:
         keys = list(self.axes)
@@ -94,3 +144,19 @@ class SweepSpec:
                 node[leaf] = v
             d["job_id"] = f"{self.base.job_id}-{i}"
             yield BenchmarkJobSpec.from_dict(d)
+
+
+def load_jobs(path: Union[str, Path]) -> List[BenchmarkJobSpec]:
+    """Expand a config file into concrete job specs.
+
+    Accepted layouts (JSON or TOML):
+      * a single job object,
+      * ``{"base": {...}, "axes": {...}}`` — a sweep, expanded here,
+      * ``{"jobs": [{...}, ...]}`` — an explicit job list.
+    """
+    data = _load_config_data(path)
+    if "base" in data:
+        return list(SweepSpec.from_dict(data).expand())
+    if "jobs" in data:
+        return [BenchmarkJobSpec.from_dict(j) for j in data["jobs"]]
+    return [BenchmarkJobSpec.from_dict(data)]

@@ -1,0 +1,3 @@
+from repro.dist import sharding
+
+__all__ = ["sharding"]

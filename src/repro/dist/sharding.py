@@ -1,0 +1,177 @@
+"""Logical-axis sharding rules → concrete ``PartitionSpec``s.
+
+Model code names tensor dimensions with *logical* axes ("embed", "ffn",
+"batch", ...); a rule set maps each logical axis to the mesh axes it may
+shard over.  ``partition_spec`` resolves the mapping against a concrete
+(or abstract) mesh with two safety nets:
+
+  * divisibility fallback — a mesh axis that does not evenly divide the
+    dimension is dropped (replicate rather than pad),
+  * duplicate-axis avoidance — a mesh axis is consumed by the first
+    dimension that claims it; later dimensions fall back to replication.
+
+Rule sets are plain dicts so callers can derive variants with ``dict(...)``;
+boolean entries ("moe_seq", "moe_ep_local") act as mode flags read by the
+MoE dispatch code, not as tensor axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Sequence[str]]
+
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """AbstractMesh across jax versions (positional API changed in 0.5)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def _rules(**overrides) -> Rules:
+    base: Dict[str, Any] = {
+        "batch": ["pod", "data"],
+        "seq": [],
+        "kv": ["model"],
+        "embed": ["data"],
+        "act_embed": [],
+        "vocab": ["model"],
+        "ffn": ["model"],
+        "heads": ["model"],
+        "kv_heads": ["model"],
+        "head_dim": [],
+        "embed_out": ["model"],
+        "rnn": ["model"],
+        "rnn_in": [],
+        "expert": ["model"],
+    }
+    base.update(overrides)
+    return base
+
+
+# FSDP-style training: params sharded over data, contracted dims over model.
+TRAIN_RULES: Rules = _rules()
+
+# Serving default: same layout, single-pod batch.
+SERVE_RULES: Rules = _rules(batch=["data"])
+
+# Pure tensor-parallel serving: weights replicated over data, TP over model,
+# kv cache sharded by heads rather than sequence.
+SERVE_TP_RULES: Rules = _rules(batch=["data"], embed=[], kv=[])
+
+# MoE variants (consumed by launch.dryrun / moe.moe_apply mode selection):
+# experts sharded over model (GSPMD dispatch).
+MOE_EP_RULES: Rules = _rules(expert=["model"], ffn=["model"])
+# experts over model with local (shard_map) dispatch — one psum per layer.
+MOE_EP_LOCAL_RULES: Rules = _rules(expert=["model"], moe_ep_local=True)
+# whole MoE block local per batch shard; expert weights replicated.
+MOE_LOCAL_RULES: Rules = _rules(ffn=[], expert=[], heads=[], kv_heads=[],
+                                embed=[], embed_out=[], vocab=[], kv=[],
+                                rnn=[])
+# local MoE + sequence-partitioned dispatch over the model axis.
+MOE_SP_RULES: Rules = dict(MOE_LOCAL_RULES, moe_seq=True)
+# sequence-partitioned MoE dispatch + tensor-parallel dense layers.
+MOE_SP_TP_RULES: Rules = dict(MOE_LOCAL_RULES, moe_seq=True,
+                              heads=["model"], kv_heads=["model"],
+                              embed_out=["model"], vocab=["model"],
+                              rnn=["model"])
+
+
+def partition_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                   rules: Rules, mesh) -> P:
+    """Resolve logical ``axes`` for ``shape`` into a PartitionSpec."""
+    if len(shape) != len(axes):
+        raise ValueError(f"rank mismatch: shape {tuple(shape)} "
+                         f"vs logical axes {tuple(axes)}")
+    sizes = dict(mesh.shape)
+    used: set = set()
+    entries: List[Any] = []
+    for dim, ax in zip(shape, axes):
+        chosen: List[str] = []
+        factor = 1
+        wanted = rules.get(ax, ()) if ax else ()
+        for a in wanted:
+            if a not in sizes or a in used or a in chosen:
+                continue
+            if dim % (factor * sizes[a]) == 0:
+                chosen.append(a)
+                factor *= sizes[a]
+        used.update(chosen)
+        entries.append(None if not chosen else
+                       chosen[0] if len(chosen) == 1 else tuple(chosen))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return x is None or (isinstance(x, tuple) and
+                         all(e is None or isinstance(e, str) for e in x))
+
+
+def tree_partition_specs(shape_tree, axes_tree, rules: Rules, mesh):
+    """Map a pytree of ShapeDtypeStructs + logical axes to PartitionSpecs."""
+    flat_axes, treedef = jax.tree.flatten(axes_tree, is_leaf=_is_axes_leaf)
+    flat_shapes = treedef.flatten_up_to(shape_tree)
+    specs = [partition_spec(tuple(s.shape),
+                            a if a is not None else (None,) * len(s.shape),
+                            rules, mesh)
+             for s, a in zip(flat_shapes, flat_axes)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def tree_shardings(shape_tree, axes_tree, rules: Rules, mesh):
+    specs = tree_partition_specs(shape_tree, axes_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _shard_factor(spec: P, sizes: Dict[str, int]) -> int:
+    f = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in (entry,) if isinstance(entry, str) else entry:
+            f *= sizes[a]
+    return f
+
+
+def bytes_per_device(shape_tree, spec_tree, mesh) -> int:
+    """Total per-device bytes for a sharded pytree of ShapeDtypeStructs."""
+    sizes = dict(mesh.shape)
+    flat_shapes, treedef = jax.tree.flatten(shape_tree)
+    flat_specs = treedef.flatten_up_to(spec_tree)
+    total = 0
+    for s, spec in zip(flat_shapes, flat_specs):
+        nbytes = int(np.prod(s.shape, dtype=np.int64)) * s.dtype.itemsize
+        total += nbytes // _shard_factor(spec, sizes)
+    return total
+
+
+# ---- activation sharding context -------------------------------------------
+# One-element cell so jitted closures observe updates; (mesh, rules) or None.
+_ACT_CTX: List[Optional[Tuple[Any, Rules]]] = [None]
+
+
+def set_activation_sharding(mesh, rules: Optional[Rules]) -> None:
+    _ACT_CTX[0] = None if mesh is None else (mesh, rules)
+
+
+def constrain_act(x, *axes: Optional[str]):
+    """Apply a with_sharding_constraint when a context is active; else no-op."""
+    ctx = _ACT_CTX[0]
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = partition_spec(tuple(x.shape), axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_attn_q(q):
+    return constrain_act(q, "batch", "seq", "heads", "head_dim")

@@ -10,7 +10,8 @@ decomposition (Fig. 14) reproductions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import heapq
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -18,7 +19,7 @@ from repro import hw as hw_lib
 from repro.serving.batching import BatchPolicy, QueuedRequest
 from repro.serving.latency_model import (LatencyModel, NetworkModel,
                                          NETWORKS)
-from repro.serving.workload import Request, WorkloadSpec, generate
+from repro.serving.workload import CLOSED, Request, WorkloadSpec, generate
 
 PRE_PROCESS_S = 0.0015     # resize + tensorize, per request
 POST_PROCESS_S = 0.0004    # label lookup / detokenize, per request
@@ -115,37 +116,46 @@ class SimResult:
 def simulate(workload: WorkloadSpec, policy: BatchPolicy,
              latency: LatencyModel, *, network: NetworkModel = NETWORKS["lan"],
              server_side_processing: bool = True) -> SimResult:
-    """Run the pipeline simulation; returns per-request traces + utilization."""
+    """Run the pipeline simulation; returns per-request traces + utilization.
+
+    Closed-loop workloads (``kind="closed"``) start from one seed request
+    per client; each completion immediately reissues that client's next
+    request until ``duration_s``, keeping ``concurrency`` requests in
+    flight throughout.
+    """
     requests = generate(workload)
+    closed_loop = workload.kind == CLOSED
     # arrival at the server = client arrival + preprocess + transmission
     queue: List[QueuedRequest] = []
-    pending: List[Request] = sorted(requests, key=lambda r: r.arrival_s)
     traces: Dict[int, RequestTrace] = {}
-    arrivals = []
-    for r in pending:
+    arrivals: List[Tuple[float, int, Request]] = []   # (server_arrival, id, r)
+
+    def admit(r: Request) -> None:
         tr = RequestTrace(request=r, t_preprocess=PRE_PROCESS_S,
                           t_transmit=network.transmit(r.payload_bytes))
         traces[r.req_id] = tr
-        arrivals.append((r.arrival_s + tr.t_preprocess + tr.t_transmit, r))
-    arrivals.sort(key=lambda x: x[0])
+        heapq.heappush(arrivals,
+                       (r.arrival_s + tr.t_preprocess + tr.t_transmit,
+                        r.req_id, r))
+
+    for r in requests:
+        admit(r)
+    next_id = len(requests)
 
     now = 0.0
     busy = 0.0
     server_free_at = 0.0
-    i = 0
-    n = len(arrivals)
-    while i < n or queue:
+    while arrivals or queue:
         # admit every arrival up to `now`
-        while i < n and arrivals[i][0] <= now + 1e-12:
-            t_arr, r = arrivals[i]
+        while arrivals and arrivals[0][0] <= now + 1e-12:
+            t_arr, _, r = heapq.heappop(arrivals)
             queue.append(QueuedRequest(request=r, enqueue_s=t_arr))
-            i += 1
         decision = policy.next_batch(queue, now, server_free_at)
         if decision is None:
             # advance time to the next event (arrival or policy timeout)
             candidates = []
-            if i < n:
-                candidates.append(arrivals[i][0])
+            if arrivals:
+                candidates.append(arrivals[0][0])
             fire = policy.earliest_fire(queue)
             if fire is not None:
                 candidates.append(max(fire, server_free_at))
@@ -174,6 +184,12 @@ def simulate(workload: WorkloadSpec, policy: BatchPolicy,
             tr.t_postprocess = POST_PROCESS_S
             tr.batch_size = bsz
             tr.done_s = server_free_at + POST_PROCESS_S
+            if closed_loop and tr.done_s < workload.duration_s:
+                # the client observes the response and issues its next
+                # request, keeping its loop at concurrency 1
+                admit(dataclasses.replace(q.request, req_id=next_id,
+                                          arrival_s=tr.done_s))
+                next_id += 1
         now = max(now, start)
 
     done = [t for t in traces.values() if t.done_s > 0]

@@ -62,8 +62,8 @@ def generate(spec: WorkloadSpec) -> List[Request]:
             if t < spec.duration_s:
                 times.append(t)
     elif spec.kind == CLOSED:
-        # closed loop is resolved by the simulator; emit one seed request
-        # per client at t=0 (the simulator reissues on completion).
+        # one seed request per client at t=0; simulator.simulate reissues
+        # each client's next request on completion until duration_s
         times = [0.0] * spec.concurrency
     else:
         raise ValueError(spec.kind)

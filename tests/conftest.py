@@ -1,0 +1,7 @@
+"""Gate tests whose optional dependencies are absent in this image."""
+collect_ignore = []
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    collect_ignore.append("test_property.py")

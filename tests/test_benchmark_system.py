@@ -6,7 +6,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import (BenchmarkJobSpec, Leader, ModelRef, PerfDB,
+from repro.core import (BenchmarkJobSpec, BenchmarkSession, ModelRef, PerfDB,
                         SoftwareSpec, SweepSpec, execute_job)
 from repro.core import generator as gen
 from repro.core.analysis import (cdf, heatmap, leaderboard, recommend,
@@ -44,15 +44,15 @@ def test_execute_registered_job():
                                   "inference", "postprocess"}
 
 
-def test_leader_end_to_end(tmp_path):
+def test_session_end_to_end(tmp_path):
     db = PerfDB(str(tmp_path / "perf.jsonl"))
-    leader = Leader(n_workers=2, db=db)
+    session = BenchmarkSession(n_workers=2, db=db)
     base = BenchmarkJobSpec(job_id="sw", model=ModelRef(name="granite-8b"),
                             chips=8, slo_latency_s=0.1,
                             workload=WorkloadSpec(rate=100, duration_s=2))
-    for s in SweepSpec(base, axes={"software.policy": ["none", "tris"]}).expand():
-        leader.submit(s)
-    recs = leader.run_all()
+    session.submit_sweep(
+        SweepSpec(base, axes={"software.policy": ["none", "tris"]}))
+    recs = session.run()
     assert len(recs) == 2 and len(db) == 2
     # persistence round-trip
     db2 = PerfDB(str(tmp_path / "perf.jsonl"))

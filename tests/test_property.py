@@ -11,9 +11,7 @@ from repro.serving.batching import PreferredBatcher, QueuedRequest, WindowBatche
 from repro.serving.workload import Request
 from repro.training.compress import dequantize, quantize
 
-from jax.sharding import AbstractMesh
-
-MESH = AbstractMesh((4, 8), ("data", "model"))
+MESH = shd.abstract_mesh((4, 8), ("data", "model"))
 
 
 @settings(max_examples=50, deadline=None)

@@ -1,0 +1,256 @@
+"""BenchmarkSession API: spec/config round-trips, typed results ↔ PerfDB
+JSONL, executor equivalence (inline vs concurrent followers), closed-loop
+workloads, and the Leader deprecation shim."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (BenchmarkJobSpec, BenchmarkSession,
+                        ConcurrentFollowerExecutor, InlineExecutor, JobResult,
+                        Leader, ModelRef, PerfDB, ScheduleInfo, SoftwareSpec,
+                        StageBreakdown, SweepSpec, load_jobs, run_stages)
+from repro.serving.workload import WorkloadSpec
+
+BASE = BenchmarkJobSpec(
+    job_id="t", model=ModelRef(name="gemma2-2b"), chips=8,
+    software=SoftwareSpec(policy="tris", preferred=(8, 4, 2, 1)),
+    workload=WorkloadSpec(rate=100, duration_s=1, seed=0))
+
+
+# ---- spec & config round-trips ---------------------------------------------
+def test_spec_dict_roundtrip_identity():
+    d1 = BASE.to_dict()
+    spec = BenchmarkJobSpec.from_dict(d1)
+    assert spec == BASE
+    # nested sequences normalize to tuples and survive a second trip
+    assert isinstance(spec.software.preferred, tuple)
+    assert isinstance(spec.metrics, tuple)
+    assert spec.to_dict() == d1
+    assert BenchmarkJobSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_sweep_dict_roundtrip_and_dotted_axes():
+    sweep = SweepSpec(BASE, axes={"software.policy": ["none", "tfs"],
+                                  "workload.rate": [10, 20, 30]})
+    back = SweepSpec.from_dict(json.loads(json.dumps(sweep.to_dict())))
+    jobs = list(back.expand())
+    assert len(jobs) == 6
+    assert {j.software.policy for j in jobs} == {"none", "tfs"}
+    assert {j.workload.rate for j in jobs} == {10, 20, 30}
+    assert len({j.job_id for j in jobs}) == 6
+
+
+def test_spec_from_json_file(tmp_path):
+    p = tmp_path / "job.json"
+    p.write_text(BASE.to_json(indent=2))
+    assert BenchmarkJobSpec.from_file(p).job_id == "t"
+
+
+def _has_toml() -> bool:
+    try:
+        import tomllib  # noqa: F401
+        return True
+    except ImportError:
+        try:
+            import tomli  # noqa: F401
+            return True
+        except ImportError:
+            return False
+
+
+@pytest.mark.skipif(not _has_toml(), reason="neither tomllib nor tomli")
+def test_spec_from_toml_file(tmp_path):
+    p = tmp_path / "job.toml"
+    p.write_text('job_id = "toml-job"\nchips = 4\n'
+                 '[model]\nname = "gemma2-2b"\n'
+                 '[workload]\nrate = 50\nduration_s = 1\n')
+    spec = BenchmarkJobSpec.from_file(p)
+    assert spec.job_id == "toml-job" and spec.chips == 4
+    assert spec.workload.rate == 50
+
+
+def test_load_jobs_shapes(tmp_path):
+    single = tmp_path / "one.json"
+    single.write_text(BASE.to_json())
+    assert [s.job_id for s in load_jobs(single)] == ["t"]
+    sweep = tmp_path / "sweep.json"
+    sweep.write_text(json.dumps({"base": BASE.to_dict(),
+                                 "axes": {"chips": [4, 8]}}))
+    assert len(load_jobs(sweep)) == 2
+    joblist = tmp_path / "list.json"
+    joblist.write_text(json.dumps({"jobs": [BASE.to_dict(),
+                                            dict(BASE.to_dict(),
+                                                 job_id="t2")]}))
+    assert [s.job_id for s in load_jobs(joblist)] == ["t", "t2"]
+    with pytest.raises(ValueError):
+        BenchmarkJobSpec.from_file(sweep)
+
+
+# ---- typed results ↔ PerfDB JSONL ------------------------------------------
+def test_jobresult_record_roundtrip(tmp_path):
+    result = run_stages(BASE).with_schedule(
+        ScheduleInfo(worker=1, start_s=0.0, finish_s=2.5, jct_s=2.5))
+    db = PerfDB(str(tmp_path / "perf.jsonl"))
+    db.insert(result.to_record())
+    reloaded = PerfDB(str(tmp_path / "perf.jsonl"))
+    back = JobResult.from_record(reloaded.all()[0])
+    assert back.spec == BASE
+    assert back.schedule == result.schedule
+    assert back.stages == result.stages
+    assert back.metrics == result.metrics
+    assert back.mode == "roofline-model"
+    # full record identity modulo the ts PerfDB stamps on insert
+    rec = back.to_record()
+    rec.pop("ts")
+    assert rec == result.to_record()
+    # and the typed view re-serializes to valid JSONL
+    json.loads(json.dumps(back.to_record()))
+
+
+def test_stage_breakdown_total():
+    sb = StageBreakdown(preprocess=1, transmit=2, queue=3, inference=4,
+                        postprocess=5)
+    assert sb.total() == 15
+    assert StageBreakdown.from_dict(sb.to_dict()) == sb
+
+
+# ---- session submission styles ---------------------------------------------
+def test_session_three_submission_styles(tmp_path):
+    config = tmp_path / "sweep.json"
+    config.write_text(json.dumps({
+        "base": dict(BASE.to_dict(), job_id="cfg"),
+        "axes": {"software.policy": ["none", "tris"]}}))
+    session = BenchmarkSession(n_workers=2)
+    h1 = session.submit(BASE)                                     # object
+    h2 = session.submit(dict(BASE.to_dict(), job_id="t-dict"))    # dict
+    hs = session.submit_file(config)                              # file
+    assert session.pending == 4
+    assert not h1.done()
+    with pytest.raises(TimeoutError):
+        h2.result(timeout=0.01)
+    results = session.run()
+    assert len(results) == 4 and session.pending == 0
+    assert len(session.db) == 4 and len(session.results()) == 4
+    assert h1.result().job_id == "t"
+    assert {h.result().job_id for h in hs} == {"cfg-0", "cfg-1"}
+    for r in results:
+        assert r.metric("throughput_rps") > 0
+        assert r.schedule is not None and r.schedule.jct_s > 0
+
+
+def test_session_rejects_duplicates_and_junk():
+    session = BenchmarkSession(n_workers=1)
+    session.submit(BASE)
+    with pytest.raises(ValueError):
+        session.submit(BASE)
+    with pytest.raises(TypeError):
+        session.submit(42)
+
+
+def test_session_context_manager_runs_pending():
+    with BenchmarkSession(n_workers=2) as session:
+        handle = session.submit(BASE)
+    assert handle.done()
+    assert len(session.results()) == 1
+
+
+# ---- executor equivalence & follower bookkeeping ---------------------------
+SWEEP = SweepSpec(BASE, axes={"software.policy": ["none", "tfs", "tris"],
+                              "chips": [4, 8]})
+
+
+def _run(executor):
+    session = BenchmarkSession(n_workers=3, executor=executor)
+    session.submit_sweep(SWEEP)
+    return session, session.run()
+
+
+def test_executors_produce_identical_records():
+    _, inline_res = _run(InlineExecutor())
+    _, conc_res = _run(ConcurrentFollowerExecutor())
+
+    def strip(r):
+        rec = r.to_record()
+        rec.pop("benchmark_wall_s")        # wall-clock; all else deterministic
+        return rec
+
+    a = {r.job_id: strip(r) for r in inline_res}
+    b = {r.job_id: strip(r) for r in conc_res}
+    assert a == b and len(a) == 6
+
+
+@pytest.mark.parametrize("executor_cls",
+                         [InlineExecutor, ConcurrentFollowerExecutor])
+def test_follower_busy_until_matches_schedule(executor_cls):
+    session, results = _run(executor_cls())
+    per_worker = {}
+    for r in results:
+        w = r.schedule.worker
+        per_worker.setdefault(w, []).append(r.schedule)
+    for f in session.followers:
+        scheds = per_worker.get(f.worker_id, [])
+        assert f.executed == len(scheds)
+        expect = max((s.finish_s for s in scheds), default=0.0)
+        assert abs(f.busy_until - expect) < 1e-9
+    # two-tier schedule honored: per-worker intervals never overlap
+    for scheds in per_worker.values():
+        scheds.sort(key=lambda s: s.start_s)
+        for x, y in zip(scheds, scheds[1:]):
+            assert y.start_s >= x.finish_s - 1e-9
+
+
+@pytest.mark.parametrize("executor_cls",
+                         [InlineExecutor, ConcurrentFollowerExecutor])
+def test_failed_job_fails_every_unexecuted_handle(executor_cls):
+    session = BenchmarkSession(n_workers=1, executor=executor_cls())
+    bad = session.submit(dataclasses.replace(BASE, job_id="bad",
+                                             hardware="no-such-hw"))
+    other = session.submit(dataclasses.replace(BASE, job_id="other"))
+    with pytest.raises(KeyError):
+        session.run()
+    for h in (bad, other):
+        assert h.done()
+        with pytest.raises((KeyError, RuntimeError)):
+            h.result(timeout=1)
+
+
+# ---- closed-loop workload ---------------------------------------------------
+def test_closed_loop_reissues_until_duration():
+    spec = dataclasses.replace(
+        BASE, job_id="closed",
+        software=SoftwareSpec(policy="tris", preferred=(4, 2, 1)),
+        workload=WorkloadSpec(kind="closed", concurrency=4, duration_s=1.0))
+    res = run_stages(spec)
+    # far more completions than the 4 seed requests
+    assert res.metric("requests") > 4 * 10
+    assert res.metric("throughput_rps") > 0
+
+
+def test_closed_loop_steady_concurrency():
+    from repro.configs import get_config
+    from repro.serving.batching import make_policy
+    from repro.serving.latency_model import LatencyModel
+    from repro.serving.simulator import simulate
+    wl = WorkloadSpec(kind="closed", concurrency=4, duration_s=1.0)
+    res = simulate(wl, make_policy("tris", preferred=(4, 2, 1)),
+                   LatencyModel(get_config("gemma2-2b"), chips=8))
+    for t in np.linspace(0.1, 0.9, 9):
+        inflight = sum(1 for tr in res.traces
+                       if tr.request.arrival_s <= t < tr.done_s)
+        assert inflight == wl.concurrency, (t, inflight)
+
+
+# ---- deprecation shim -------------------------------------------------------
+def test_leader_shim_still_works(tmp_path):
+    db = PerfDB(str(tmp_path / "perf.jsonl"))
+    with pytest.deprecated_call():
+        leader = Leader(n_workers=2, db=db)
+    for s in SweepSpec(BASE, axes={"chips": [4, 8]}).expand():
+        leader.submit(s)
+    recs = leader.run_all()
+    assert len(recs) == 2 and len(db) == 2
+    for rec in recs:
+        assert rec["sched"]["jct_s"] > 0
+        assert rec["result"]["throughput_rps"] > 0

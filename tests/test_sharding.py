@@ -3,12 +3,12 @@ avoidance, per-device byte accounting.  Uses AbstractMesh so no devices
 are needed."""
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as shd
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH1 = shd.abstract_mesh((16, 16), ("data", "model"))
+MESH2 = shd.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def spec(shape, axes, rules=None, mesh=MESH1):

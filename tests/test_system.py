@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
-from repro.core import (BenchmarkJobSpec, Leader, ModelRef, PerfDB,
+from repro.core import (BenchmarkJobSpec, BenchmarkSession,
+                        ConcurrentFollowerExecutor, ModelRef, PerfDB,
                         SoftwareSpec, SweepSpec)
 from repro.core.analysis import recommend
 from repro.models import build_model, reduced
@@ -16,7 +17,8 @@ from repro.serving.workload import WorkloadSpec
 def test_full_benchmark_workflow(tmp_path):
     """The paper's end-to-end path: config file → report."""
     db = PerfDB(str(tmp_path / "db.jsonl"))
-    leader = Leader(n_workers=2, db=db, lb="qa", order="sjf")
+    session = BenchmarkSession(n_workers=2, db=db, lb="qa", order="sjf",
+                               executor=ConcurrentFollowerExecutor())
     base = BenchmarkJobSpec(
         job_id="workflow", model=ModelRef(name="gemma2-2b"), chips=8,
         slo_latency_s=0.05,
@@ -25,14 +27,14 @@ def test_full_benchmark_workflow(tmp_path):
         "software.policy": ["none", "tfs", "tris"],
         "chips": [4, 8],
     })
-    for s in sweep.expand():
-        leader.submit(s)
-    recs = leader.run_all()
-    assert len(recs) == 6
-    # every record has the full metric set + scheduling metadata
-    for r in recs:
-        assert r["result"]["throughput_rps"] > 0
-        assert r["sched"]["jct_s"] > 0
+    handles = session.submit_sweep(sweep)
+    results = session.run()
+    assert len(results) == 6
+    # every typed result has the full metric set + scheduling metadata
+    for h in handles:
+        r = h.result()
+        assert r.metric("throughput_rps") > 0
+        assert r.schedule is not None and r.schedule.jct_s > 0
     # stage 4: recommendation under the SLO
     top = recommend(db, slo_latency_s=0.05)
     assert top, "no configuration met the SLO"
