@@ -1,0 +1,166 @@
+"""Cluster-scale serving: throughput & p99-SLO attainment across
+replicas × batching policy × router.
+
+Four sections:
+  (a) ramp knee-finding — window vs preferred vs continuous batching on a
+      stepped-rate generation workload (continuous should win throughput
+      at equal-or-better p99);
+  (b) replicas × router sweep at a fixed overload rate — SLO attainment;
+  (c) saturation scaling — highest sustained rate for 1 replica vs a
+      4-replica least-loaded cluster (target: ≥ 3× scaling);
+  (d) reactive autoscaler under a bursty workload.
+
+``--smoke`` shrinks durations/grids for CI.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+# allow `python benchmarks/bench_cluster.py` (script dir is on sys.path,
+# repo root is not)
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.configs import get_config
+from repro.core.analysis import saturation_knee
+from repro.serving.batching import make_policy
+from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.latency_model import LatencyModel
+from repro.serving.simulator import simulate
+from repro.serving.workload import WorkloadSpec, ramp_step_rates
+
+from benchmarks.common import emit, save_json, timed
+
+MODEL = "gemma2-2b"
+CHIPS = 4
+SLO_S = 0.25
+
+
+def _policies():
+    return {
+        "window": lambda: make_policy("tfs", max_batch=16, timeout_s=0.01),
+        "preferred": lambda: make_policy("tris",
+                                         preferred=(16, 8, 4, 2, 1)),
+        "continuous": lambda: make_policy("continuous", max_batch=16,
+                                          max_prefill=8),
+    }
+
+
+def _gen_workload(**kw) -> WorkloadSpec:
+    base = dict(prompt_tokens=128, output_tokens=8, output_tokens_max=32)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+def ramp_comparison(lm, smoke, out):
+    wl = _gen_workload(kind="ramp", duration_s=2 if smoke else 6,
+                       ramp_min_rate=50, ramp_max_rate=500,
+                       ramp_steps=3 if smoke else 6, seed=0)
+    stats = {}
+    for name, factory in _policies().items():
+        res, us = timed(simulate, wl, factory(), lm)
+        s = dict(res.summary(), slo_attainment=res.slo_attainment(SLO_S))
+        stats[name] = s
+        out[f"ramp/{name}"] = s
+        emit(f"cluster.ramp.{name}", us,
+             f"thr={s['throughput_rps']:.0f}rps;"
+             f"p99={s['p99_s']*1e3:.0f}ms;"
+             f"slo={s['slo_attainment']:.2f}")
+    cont, win = stats["continuous"], stats["window"]
+    emit("cluster.finding.continuous_vs_window", 0.0,
+         f"thr_ratio={cont['throughput_rps']/max(win['throughput_rps'],1e-9):.2f}x;"
+         f"p99_ratio={cont['p99_s']/max(win['p99_s'],1e-12):.2f}x")
+
+
+def replica_router_sweep(lm, smoke, out):
+    wl = _gen_workload(rate=150 if smoke else 600,
+                       duration_s=2 if smoke else 4, seed=1)
+    replica_grid = (1, 2) if smoke else (1, 2, 4, 8)
+    for reps in replica_grid:
+        for router in ("round-robin", "least-loaded", "affinity"):
+            res, us = timed(
+                simulate_cluster, wl,
+                make_policy("continuous", max_batch=16), lm,
+                cluster=ClusterSpec(replicas=reps, router=router))
+            s = dict(res.summary(), slo_attainment=res.slo_attainment(SLO_S))
+            out[f"sweep/r{reps}/{router}"] = s
+            emit(f"cluster.sweep.r{reps}.{router}", us,
+                 f"thr={s['throughput_rps']:.0f}rps;"
+                 f"p99={s['p99_s']*1e3:.0f}ms;"
+                 f"slo={s['slo_attainment']:.2f}")
+
+
+def _saturation_rate(lm, cluster, rates, duration_s):
+    """Highest offered rate the config sustains: the run's makespan stays
+    within 10% of the workload window (no unbounded backlog) and p99
+    meets the SLO."""
+    tested, p99s = [], []
+    for rate in rates:
+        wl = _gen_workload(rate=rate, duration_s=duration_s, seed=2)
+        res = simulate_cluster(wl, make_policy("continuous", max_batch=16),
+                               lm, cluster=cluster)
+        p99 = res.percentile(99)
+        if res.duration_s > 1.1 * wl.duration_s:
+            p99 = float("inf")      # unbounded backlog never sustains
+        tested.append(rate)
+        p99s.append(p99)
+        if p99 > SLO_S:
+            break
+    return saturation_knee(tested, p99s, SLO_S), p99s
+
+
+def saturation_scaling(lm, smoke, out):
+    duration = 2 if smoke else 4
+    rates = [50, 100, 150, 200, 300, 400, 600, 800, 1000, 1200, 1600, 2000]
+    single, _ = _saturation_rate(
+        lm, ClusterSpec(replicas=1), rates, duration)
+    quad, _ = _saturation_rate(
+        lm, ClusterSpec(replicas=4, router="least-loaded"), rates, duration)
+    ratio = quad / single if single and quad else None
+    out["saturation"] = {"single_rps": single, "quad_rps": quad,
+                         "ratio": ratio}
+    emit("cluster.finding.scaling_4x", 0.0,
+         f"single={single}rps;quad_least_loaded={quad}rps;"
+         + (f"ratio={ratio:.2f}x" if ratio is not None
+            else "ratio=n/a (no sustained rate)"))
+
+
+def autoscale_demo(lm, smoke, out):
+    wl = _gen_workload(kind="burst", rate=100 if smoke else 300,
+                       duration_s=2 if smoke else 6, burst_factor=8,
+                       output_tokens=4, output_tokens_max=0, seed=3)
+    for scale in (False, True):
+        res, us = timed(
+            simulate_cluster, wl, make_policy("continuous", max_batch=16),
+            lm, cluster=ClusterSpec(
+                replicas=1, autoscale=scale, max_replicas=6,
+                scale_interval_s=0.25, spawn_delay_s=0.2))
+        s = dict(res.summary(), slo_attainment=res.slo_attainment(SLO_S))
+        out[f"autoscale/{'on' if scale else 'off'}"] = s
+        emit(f"cluster.autoscale.{'on' if scale else 'off'}", us,
+             f"replicas={res.replicas};p99={s['p99_s']*1e3:.0f}ms;"
+             f"slo={s['slo_attainment']:.2f}")
+
+
+def run(smoke: bool = False) -> None:
+    lm = LatencyModel(get_config(MODEL), chips=CHIPS)
+    out = {}
+    ramp_comparison(lm, smoke, out)
+    replica_router_sweep(lm, smoke, out)
+    saturation_scaling(lm, smoke, out)
+    autoscale_demo(lm, smoke, out)
+    # knee of the ramp per policy (for the writeup)
+    wl = _gen_workload(kind="ramp", duration_s=2 if smoke else 6,
+                       ramp_min_rate=50, ramp_max_rate=500,
+                       ramp_steps=3 if smoke else 6, seed=0)
+    out["ramp_step_rates"] = ramp_step_rates(wl)
+    save_json("cluster_scale", out)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grids/durations for CI")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -51,11 +51,11 @@ def run_config(args) -> None:
 
 
 def run_suites(only) -> None:
-    from benchmarks import (bench_cost, bench_dynamic_batching,
-                            bench_kernels, bench_latency_throughput,
-                            bench_pipeline, bench_roofline,
-                            bench_scheduler, bench_sensitivity,
-                            bench_tail_latency)
+    from benchmarks import (bench_cluster, bench_cost,
+                            bench_dynamic_batching, bench_kernels,
+                            bench_latency_throughput, bench_pipeline,
+                            bench_roofline, bench_scheduler,
+                            bench_sensitivity, bench_tail_latency)
     suites = [
         ("fig7_latency_throughput", bench_latency_throughput.run),
         ("fig8_cost", bench_cost.run),
@@ -65,6 +65,7 @@ def run_suites(only) -> None:
         ("fig12_dynamic_batching", bench_dynamic_batching.run),
         ("fig14_pipeline", bench_pipeline.run),
         ("fig15_scheduler", bench_scheduler.run),
+        ("cluster_scale", bench_cluster.run),
         ("kernels_micro", bench_kernels.run),
     ]
     print("name,us_per_call,derived")

@@ -5,13 +5,13 @@ from repro.core.scheduler import ClusterScheduler, evaluate_schedulers
 from repro.core.session import (BenchmarkSession, ConcurrentFollowerExecutor,
                                 Executor, Follower, InlineExecutor, JobHandle,
                                 execute_job, resolve_policy, run_stages)
-from repro.core.spec import (BenchmarkJobSpec, ModelRef, SoftwareSpec,
-                             SweepSpec, load_jobs)
+from repro.core.spec import (BenchmarkJobSpec, ClusterSpec, ModelRef,
+                             SoftwareSpec, SweepSpec, load_jobs)
 
 __all__ = [
     "BenchmarkSession", "ConcurrentFollowerExecutor", "Executor", "Follower",
     "InlineExecutor", "JobHandle", "execute_job", "resolve_policy",
     "run_stages", "JobResult", "ScheduleInfo", "StageBreakdown", "Leader",
     "PerfDB", "ClusterScheduler", "evaluate_schedulers", "BenchmarkJobSpec",
-    "ModelRef", "SoftwareSpec", "SweepSpec", "load_jobs",
+    "ClusterSpec", "ModelRef", "SoftwareSpec", "SweepSpec", "load_jobs",
 ]

@@ -73,6 +73,32 @@ def roofline_ceiling(hw: hw_lib.HardwareModel,
     return [hw.attainable_flops(i) for i in intensities]
 
 
+# ---- SLO attainment + saturation knee (cluster capacity planning) ----------
+def slo_attainment(latencies: Sequence[float], slo_latency_s: float) -> float:
+    """Fraction of requests whose latency met the SLO."""
+    lat = np.asarray(latencies, dtype=float)
+    if lat.size == 0:
+        return 0.0
+    return float(np.mean(lat <= slo_latency_s))
+
+
+def saturation_knee(rates: Sequence[float], p99s: Sequence[float],
+                    slo_latency_s: float) -> Optional[float]:
+    """Highest offered rate whose p99 still meets the SLO (ramp sweeps).
+
+    Scans (rate, p99) pairs in increasing-rate order and returns the last
+    rate before the SLO is first violated — the serving capacity knee —
+    or None if even the lowest rate misses the SLO.
+    """
+    knee = None
+    for rate, p99 in sorted(zip(rates, p99s)):
+        if p99 <= slo_latency_s:
+            knee = rate
+        else:
+            break
+    return knee
+
+
 # ---- recommender (paper's utility function) --------------------------------
 def recommend(db: PerfDB, *, slo_latency_s: float, metric: str = "p99_s",
               objective: str = "cost_per_1k_req", top: int = 3,

@@ -16,12 +16,18 @@ from repro.core.spec import BenchmarkJobSpec
 
 @dataclasses.dataclass(frozen=True)
 class StageBreakdown:
-    """Mean per-request latency of each pipeline stage (paper Fig. 14)."""
+    """Mean per-request latency of each pipeline stage (paper Fig. 14).
+
+    ``batch_wait`` is the policy-attributable slice of ``queue`` (waiting
+    while capacity was free but the batch had not fired), so it is *not*
+    added again by ``total()``.
+    """
     preprocess: float = 0.0
     transmit: float = 0.0
     queue: float = 0.0
     inference: float = 0.0
     postprocess: float = 0.0
+    batch_wait: float = 0.0
 
     def total(self) -> float:
         return (self.preprocess + self.transmit + self.queue
@@ -64,6 +70,7 @@ class JobResult:
     stages: Optional[StageBreakdown] = None
     cold_start_s: Optional[float] = None
     generated: Optional[Dict[str, Any]] = None
+    cluster: Optional[Dict[str, Any]] = None   # replica-tier provenance
     schedule: Optional[ScheduleInfo] = None
     benchmark_wall_s: float = 0.0
     ts: Optional[float] = None
@@ -104,6 +111,8 @@ class JobResult:
             rec["stages"] = self.stages.to_dict()
         if self.cold_start_s is not None:
             rec["cold_start_s"] = self.cold_start_s
+        if self.cluster is not None:
+            rec["cluster"] = dict(self.cluster)
         rec["benchmark_wall_s"] = self.benchmark_wall_s
         if self.schedule is not None:
             rec["sched"] = self.schedule.to_dict()
@@ -121,6 +130,8 @@ class JobResult:
             cold_start_s=rec.get("cold_start_s"),
             generated=(dict(rec["generated"])
                        if rec.get("generated") is not None else None),
+            cluster=(dict(rec["cluster"])
+                     if rec.get("cluster") is not None else None),
             schedule=(ScheduleInfo.from_dict(rec["sched"])
                       if "sched" in rec else None),
             benchmark_wall_s=rec.get("benchmark_wall_s", 0.0),

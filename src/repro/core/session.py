@@ -41,20 +41,24 @@ from repro.core.scheduler import ClusterScheduler, Job, ScheduledJob
 from repro.core.spec import (BenchmarkJobSpec, SoftwareSpec, SweepSpec,
                              load_jobs)
 from repro.serving.batching import BatchPolicy, make_policy
+from repro.serving.cluster import simulate_cluster
 from repro.serving.latency_model import (LatencyModel, MeasuredLatency,
                                          NETWORKS)
-from repro.serving.simulator import simulate
 
 JobLike = Union[BenchmarkJobSpec, Mapping[str, Any], str, Path]
 
 
 def resolve_policy(sw: SoftwareSpec) -> BatchPolicy:
-    """Software tier → batching policy (paper's TFS vs TrIS comparison)."""
+    """Software tier → batching policy (paper's TFS vs TrIS comparison,
+    plus the Orca/vLLM-style continuous batcher)."""
     if sw.policy in ("none", "nobatch"):
         return make_policy("none")
     if sw.policy in ("tfs", "window"):
         return make_policy("tfs", max_batch=sw.max_batch,
                            timeout_s=sw.timeout_s)
+    if sw.policy in ("continuous", "orca", "vllm"):
+        return make_policy("continuous", max_batch=sw.max_batch,
+                           max_prefill=sw.max_prefill)
     return make_policy("tris", preferred=tuple(sw.preferred))
 
 
@@ -91,12 +95,22 @@ def run_stages(spec: BenchmarkJobSpec) -> JobResult:
     cfg = get_config(spec.model.name)
     lat = LatencyModel(cfg, hw=hwm, chips=spec.chips, int8=spec.software.int8)
     policy = resolve_policy(spec.software)
-    res = simulate(spec.workload, policy, lat, network=NETWORKS[spec.network])
+    res = simulate_cluster(spec.workload, policy, lat, cluster=spec.cluster,
+                           network=NETWORKS[spec.network])
+    metrics = dict(res.summary(), mode="roofline-model")
+    if spec.slo_latency_s is not None:
+        metrics["slo_attainment"] = res.slo_attainment(spec.slo_latency_s)
     return JobResult(
         spec=spec,
-        metrics=dict(res.summary(), mode="roofline-model"),
+        metrics=metrics,
         stages=StageBreakdown.from_dict(res.stage_means()),
         cold_start_s=lat.cold_start(),
+        cluster={
+            "replicas": res.replicas,
+            "router": res.router,
+            "autoscale": spec.cluster.autoscale,
+            "per_replica_busy_s": list(res.per_replica_busy_s or []),
+        },
         benchmark_wall_s=time.time() - t0)
 
 

@@ -14,6 +14,7 @@ import json
 from pathlib import Path
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 
+from repro.serving.cluster import ClusterSpec
 from repro.serving.workload import WorkloadSpec
 
 
@@ -52,10 +53,11 @@ class ModelRef:
 
 @dataclasses.dataclass(frozen=True)
 class SoftwareSpec:
-    policy: str = "tris"            # none | tfs | tris
-    max_batch: int = 8
+    policy: str = "tris"            # none | tfs | tris | continuous
+    max_batch: int = 8              # window cap / continuous decode slots
     timeout_s: float = 0.005
     preferred: Sequence[int] = (8, 4, 2, 1)
+    max_prefill: int = 8            # continuous: joins per iteration
     int8: bool = False              # the paper's INT8-conversion step
     use_pallas_kernels: bool = True
 
@@ -69,10 +71,24 @@ class BenchmarkJobSpec:
     chips: int = 8
     software: SoftwareSpec = SoftwareSpec()
     workload: WorkloadSpec = WorkloadSpec()
+    cluster: ClusterSpec = ClusterSpec()
     network: str = "lan"
     slo_latency_s: Optional[float] = None
     metrics: Sequence[str] = ("latency", "throughput", "cost", "utilization")
     est_processing_s: float = 1.0   # scheduler hint (paper: known a priori)
+
+    def __post_init__(self):
+        # accept plain dicts for the nested specs (declarative construction)
+        coercions = (("model", ModelRef), ("software", SoftwareSpec),
+                     ("workload", WorkloadSpec), ("cluster", ClusterSpec))
+        for field, cls in coercions:
+            val = getattr(self, field)
+            if isinstance(val, dict):
+                d = dict(val)
+                if cls is SoftwareSpec and isinstance(d.get("preferred"),
+                                                      list):
+                    d["preferred"] = tuple(d["preferred"])
+                object.__setattr__(self, field, cls(**d))
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -80,15 +96,8 @@ class BenchmarkJobSpec:
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "BenchmarkJobSpec":
         d = dict(d)
-        if isinstance(d.get("model"), dict):
-            d["model"] = ModelRef(**d["model"])
-        if isinstance(d.get("software"), dict):
-            sw = dict(d["software"])
-            if isinstance(sw.get("preferred"), list):
-                sw["preferred"] = tuple(sw["preferred"])
-            d["software"] = SoftwareSpec(**sw)
-        if isinstance(d.get("workload"), dict):
-            d["workload"] = WorkloadSpec(**d["workload"])
+        # nested dicts (model/software/workload/cluster) are coerced to
+        # their spec types by __post_init__
         if isinstance(d.get("metrics"), list):
             d["metrics"] = tuple(d["metrics"])
         return cls(**d)

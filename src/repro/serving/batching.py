@@ -4,13 +4,19 @@ The paper's software tier compares TFS and Triton; what actually differs
 between them is the batching policy, which we implement as composable
 strategies over the same engine:
 
-  NoBatching       — every request served alone (the CPU baseline).
-  WindowBatcher    — TFS-style: wait up to ``timeout`` for ``max_batch``;
-                     fires on full batch or timeout of the oldest request.
-  PreferredBatcher — TrIS-style: fire eagerly as soon as any preferred
-                     size is reachable; pad-free, lowest queueing delay.
+  NoBatching        — every request served alone (the CPU baseline).
+  WindowBatcher     — TFS-style: wait up to ``timeout`` for ``max_batch``;
+                      fires on full batch or timeout of the oldest request.
+  PreferredBatcher  — TrIS-style: fire eagerly as soon as any preferred
+                      size is reachable; pad-free, lowest queueing delay.
+  ContinuousBatcher — Orca/vLLM-style token-level policy: decode slots
+                      free per iteration and waiting requests join the
+                      running batch at every iteration boundary.
 
-A policy sees the queue and the clock and decides (batch, fire_time).
+A request-level policy sees the queue and the clock and decides
+(batch, fire_time).  ``ContinuousBatcher`` is configuration only — the
+simulator's iteration-level engine interprets it (requests are admitted
+mid-batch, so there is no single "fire" event to decide).
 """
 from __future__ import annotations
 
@@ -101,6 +107,30 @@ class PreferredBatcher(BatchPolicy):
         return queue[0].enqueue_s + self.max_queue_delay_s
 
 
+@dataclasses.dataclass
+class ContinuousBatcher(BatchPolicy):
+    """Orca/vLLM-style iteration-level batching configuration.
+
+    ``max_batch`` caps concurrent decode slots; ``max_prefill`` caps how
+    many queued requests are prefilled (joined) per iteration boundary.
+    The policy holds no queue logic itself — the simulator's continuous
+    engine admits requests into free slots every iteration.
+    """
+    max_batch: int = 16
+    max_prefill: int = 8
+    name: str = "continuous"
+
+    def __post_init__(self):
+        if self.max_batch < 1 or self.max_prefill < 1:
+            raise ValueError("ContinuousBatcher needs max_batch >= 1 "
+                             "and max_prefill >= 1")
+
+    def next_batch(self, queue, now, server_free_at):
+        raise TypeError(
+            "ContinuousBatcher is iteration-level; it is interpreted by "
+            "the simulator's continuous engine, not via next_batch()")
+
+
 def make_policy(name: str, **kw) -> BatchPolicy:
     if name in ("none", "nobatch"):
         return NoBatching()
@@ -108,4 +138,6 @@ def make_policy(name: str, **kw) -> BatchPolicy:
         return WindowBatcher(**kw)
     if name in ("tris", "preferred", "tris-preferred"):
         return PreferredBatcher(**kw)
+    if name in ("continuous", "orca", "vllm"):
+        return ContinuousBatcher(**kw)
     raise ValueError(name)

@@ -1,0 +1,225 @@
+"""Multi-replica cluster simulation: routers, reactive autoscaling, and
+the shared discrete-event loop over ``ReplicaEngine`` timelines.
+
+This is the capacity-planning layer the paper's benchmark questions need
+at scale: N model replicas behind a pluggable router (round-robin,
+least-loaded/JSQ, session-affinity) with an optional reactive autoscaler
+that adds replicas under backlog and retires idle ones.  Every replica
+runs the same batching policy (request-level or continuous) against the
+same roofline latency oracle; the event loop owns arrivals, routing,
+closed-loop reissue and the shared clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Tuple
+
+from repro.serving.batching import BatchPolicy, QueuedRequest
+from repro.serving.latency_model import LatencyModel, NetworkModel, NETWORKS
+from repro.serving.simulator import (EPS, PRE_PROCESS_S, ReplicaEngine,
+                                     RequestTrace, SimResult)
+from repro.serving.workload import CLOSED, TRACE, Request, WorkloadSpec, \
+    generate
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Replica-tier configuration (plumbed through BenchmarkJobSpec)."""
+    replicas: int = 1
+    router: str = "round-robin"     # round-robin | least-loaded | affinity
+    autoscale: bool = False
+    min_replicas: int = 1
+    max_replicas: int = 8
+    scale_interval_s: float = 0.5   # reactive-controller evaluation period
+    scale_up_load: float = 4.0      # mean in-flight/replica to add one
+    scale_down_load: float = 0.5    # mean in-flight/replica to retire one
+    spawn_delay_s: float = 0.5      # cold-start before a new replica serves
+
+    def __post_init__(self):
+        if self.replicas < 1 or self.min_replicas < 1:
+            raise ValueError("ClusterSpec needs replicas >= 1 and "
+                             "min_replicas >= 1 (the cluster cannot scale "
+                             "up from zero: backlog is only observed on "
+                             "live replicas)")
+        if self.max_replicas < self.min_replicas:
+            raise ValueError("ClusterSpec.max_replicas must be >= "
+                             "min_replicas")
+
+    @classmethod
+    def from_dict(cls, d) -> "ClusterSpec":
+        return cls(**dict(d))
+
+
+# ---- routers ---------------------------------------------------------------
+class Router:
+    """Picks a live replica index for each arriving request."""
+    name = "base"
+
+    def route(self, request: Request, engines: List[ReplicaEngine],
+              now: float) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    name = "round-robin"
+
+    def __init__(self):
+        self._i = 0
+
+    def route(self, request, engines, now):
+        idx = self._i % len(engines)
+        self._i += 1
+        return idx
+
+
+class LeastLoadedRouter(Router):
+    """Join-the-shortest-queue over in-flight work (queued + running)."""
+    name = "least-loaded"
+
+    def route(self, request, engines, now):
+        return min(range(len(engines)),
+                   key=lambda i: (engines[i].load(now), i))
+
+
+class SessionAffinityRouter(Router):
+    """Sticky sessions: a session always lands on the same replica (while
+    the live replica set is stable)."""
+    name = "affinity"
+
+    def route(self, request, engines, now):
+        return request.session_id % len(engines)
+
+
+def make_router(name: str) -> Router:
+    if name in ("round-robin", "rr"):
+        return RoundRobinRouter()
+    if name in ("least-loaded", "jsq", "least_loaded"):
+        return LeastLoadedRouter()
+    if name in ("affinity", "session", "session-affinity"):
+        return SessionAffinityRouter()
+    raise ValueError(f"unknown router {name!r}")
+
+
+# ---- reactive autoscaler ---------------------------------------------------
+class Autoscaler:
+    """Threshold controller: scale up when mean *queued* (waiting, not
+    yet served) requests per replica exceed ``scale_up_load`` — in-flight
+    decode slots are healthy capacity use, not backlog — and retire an
+    idle replica when mean in-flight work drops below
+    ``scale_down_load``.  New replicas pay ``spawn_delay_s`` cold start."""
+
+    def __init__(self, spec: ClusterSpec, policy: BatchPolicy,
+                 latency: LatencyModel):
+        self.spec = spec
+        self.policy = policy
+        self.latency = latency
+
+    def step(self, engines: List[ReplicaEngine], now: float) -> None:
+        live = [e for e in engines if not e.retired]
+        n = len(live)
+        queued = sum(len(e.queue) for e in live) / max(n, 1)
+        inflight = sum(e.load(now) for e in live) / max(n, 1)
+        if queued > self.spec.scale_up_load and n < self.spec.max_replicas:
+            engines.append(ReplicaEngine(
+                len(engines), self.policy, self.latency,
+                spawn_s=now + self.spec.spawn_delay_s))
+        elif inflight < self.spec.scale_down_load \
+                and n > self.spec.min_replicas:
+            for e in reversed(live):
+                if e.idle(now):
+                    e.retired = True
+                    break
+
+
+# ---- cluster event loop ----------------------------------------------------
+def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
+                     latency: LatencyModel, *,
+                     cluster: ClusterSpec = ClusterSpec(),
+                     network: NetworkModel = NETWORKS["lan"]) -> SimResult:
+    """Drive a cluster of replicas over a workload; returns a SimResult
+    whose utilization/energy/cost account for the peak replica count.
+
+    ``duration_s`` is ``max(workload window, last completion)`` — a sparse
+    open-loop workload no longer reports inflated throughput, and overload
+    (completions past the window) stretches the denominator instead of
+    shrinking it.  Trace replay has no declared window, so its duration is
+    the makespan.
+    """
+    requests = generate(workload)
+    closed_loop = workload.kind == CLOSED
+    traces: Dict[int, RequestTrace] = {}
+    arrivals: List[Tuple[float, int, Request]] = []   # (server_arrival, id, r)
+
+    def admit(r: Request) -> None:
+        tr = RequestTrace(request=r, t_preprocess=PRE_PROCESS_S,
+                          t_transmit=network.transmit(r.payload_bytes))
+        traces[r.req_id] = tr
+        heapq.heappush(arrivals,
+                       (r.arrival_s + tr.t_preprocess + tr.t_transmit,
+                        r.req_id, r))
+
+    for r in requests:
+        admit(r)
+    next_id = len(requests)
+
+    engines = [ReplicaEngine(i, policy, latency)
+               for i in range(max(cluster.replicas, 1))]
+    router = make_router(cluster.router)
+    scaler = Autoscaler(cluster, policy, latency) if cluster.autoscale \
+        else None
+    next_scale = cluster.scale_interval_s
+    peak = len(engines)
+
+    now = 0.0
+    while True:
+        candidates = []
+        if arrivals:
+            candidates.append(arrivals[0][0])
+        for e in engines:
+            t = e.next_action_s(now)
+            if t is not None:
+                candidates.append(t)
+        if not candidates:
+            break
+        if scaler is not None:      # only re-evaluate while work remains
+            candidates.append(next_scale)
+        now = max(now, min(candidates))
+
+        while arrivals and arrivals[0][0] <= now + EPS:
+            t_arr, _, r = heapq.heappop(arrivals)
+            live = [e for e in engines if not e.retired]
+            # prefer replicas already past cold start; a still-spawning
+            # replica only takes traffic if no warm replica exists
+            ready = [e for e in live if e.spawn_s <= now + EPS] or live
+            ready[router.route(r, ready, now)].enqueue(
+                QueuedRequest(request=r, enqueue_s=t_arr))
+
+        if scaler is not None and now + EPS >= next_scale:
+            scaler.step(engines, now)
+            peak = max(peak, sum(1 for e in engines if not e.retired))
+            while next_scale <= now + EPS:
+                next_scale += cluster.scale_interval_s
+
+        for e in engines:
+            for done_s, r in e.act(now, traces):
+                if closed_loop and done_s < workload.duration_s:
+                    # the client observes the response and issues its next
+                    # request, keeping its loop at concurrency 1
+                    admit(dataclasses.replace(r, req_id=next_id,
+                                              arrival_s=done_s))
+                    next_id += 1
+
+    done = [t for t in traces.values() if t.done_s > 0]
+    last_done = max((t.done_s for t in done), default=0.0)
+    window = 0.0 if workload.kind == TRACE else workload.duration_s
+    duration = max(window, last_done)
+    return SimResult(
+        traces=done,
+        busy_s=sum(e.busy_s for e in engines),
+        duration_s=duration,
+        hw=latency.hw,
+        chips=latency.chips,
+        replicas=peak,
+        router=cluster.router,
+        per_replica_busy_s=[e.busy_s for e in engines])

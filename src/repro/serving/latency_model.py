@@ -78,6 +78,18 @@ class LatencyModel:
         memory_s = (weight_bytes + kv_bytes) / (self.chips * self.hw.hbm_bw)
         return max(compute_s, memory_s) + LAUNCH_OVERHEAD_S
 
+    def iteration_latency(self, n_prefill: int, prompt: int,
+                          n_decode: int, max_context: int) -> float:
+        """One continuous-batching engine iteration (Orca-style): prefill
+        the requests joining this boundary, then one decode step for the
+        whole running batch."""
+        t = 0.0
+        if n_prefill > 0:
+            t += self.prefill_latency(n_prefill, prompt)
+        if n_decode > 0:
+            t += self.decode_latency(n_decode, max(max_context, 1))
+        return t
+
     def request_latency(self, batch: int, prompt: int, out_tokens: int) -> float:
         t = self.prefill_latency(batch, prompt)
         for i in range(out_tokens - 1):

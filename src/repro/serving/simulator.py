@@ -1,28 +1,33 @@
 """Discrete-event simulator of the full inference pipeline (paper Fig. 4):
 
-  client → pre-process → transmission → queue/batch → inference → post.
+  client → pre-process → transmission → route → queue/batch → inference → post.
 
-Drives a batching policy + latency oracle over a workload trace, recording
-per-request stage latencies — the substrate for the tail-latency (Fig. 11),
-dynamic-batching (Fig. 12), utilization (Fig. 13) and pipeline-
-decomposition (Fig. 14) reproductions.
+The unit of execution is a ``ReplicaEngine`` — one server timeline that
+interprets either a request-level batching policy (NoBatching / Window /
+Preferred: whole batches occupy the server) or a ``ContinuousBatcher``
+(Orca/vLLM-style: decode slots free per iteration, waiting requests join
+the running batch at iteration boundaries, clocked by the LatencyModel's
+prefill/decode split).  ``simulate`` runs one replica; a ``Cluster`` of
+replicas behind a router/autoscaler lives in ``repro.serving.cluster``
+and drives the same engines from a shared event loop.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro import hw as hw_lib
-from repro.serving.batching import BatchPolicy, QueuedRequest
+from repro.serving.batching import (BatchPolicy, ContinuousBatcher,
+                                    QueuedRequest)
 from repro.serving.latency_model import (LatencyModel, NetworkModel,
                                          NETWORKS)
-from repro.serving.workload import CLOSED, Request, WorkloadSpec, generate
+from repro.serving.workload import Request, WorkloadSpec
 
 PRE_PROCESS_S = 0.0015     # resize + tensorize, per request
 POST_PROCESS_S = 0.0004    # label lookup / detokenize, per request
+EPS = 1e-12
 
 
 @dataclasses.dataclass
@@ -30,15 +35,20 @@ class RequestTrace:
     request: Request
     t_preprocess: float = 0.0
     t_transmit: float = 0.0
-    t_queue: float = 0.0
-    t_batch_wait: float = 0.0
+    t_queue: float = 0.0       # enqueue → service start (total wait)
+    t_batch_wait: float = 0.0  # the policy-attributable slice of t_queue:
+                               # time waited while capacity was free but the
+                               # batch had not fired / the iteration boundary
+                               # had not been reached
     t_inference: float = 0.0
     t_postprocess: float = 0.0
     batch_size: int = 1
+    replica: int = 0
     done_s: float = 0.0
 
     @property
     def e2e(self) -> float:
+        # t_batch_wait is a sub-component of t_queue, not an extra stage
         return (self.t_preprocess + self.t_transmit + self.t_queue
                 + self.t_inference + self.t_postprocess)
 
@@ -50,6 +60,9 @@ class SimResult:
     duration_s: float
     hw: hw_lib.HardwareModel
     chips: int
+    replicas: int = 1                   # peak live replica count
+    router: str = "single"
+    per_replica_busy_s: Optional[List[float]] = None
 
     # ---- aggregate metrics (the paper's metric collector) ----------------
     def latencies(self) -> np.ndarray:
@@ -63,7 +76,13 @@ class SimResult:
         return len(self.traces) / self.duration_s if self.duration_s else 0.0
 
     def utilization(self) -> float:
-        return self.busy_s / self.duration_s if self.duration_s else 0.0
+        denom = self.duration_s * max(self.replicas, 1)
+        return self.busy_s / denom if denom else 0.0
+
+    def slo_attainment(self, slo_latency_s: float) -> float:
+        """Fraction of served requests whose e2e latency met the SLO."""
+        from repro.core.analysis import slo_attainment
+        return slo_attainment(self.latencies(), slo_latency_s)
 
     def cdf(self, points: int = 50):
         lat = np.sort(self.latencies())
@@ -74,13 +93,15 @@ class SimResult:
 
     def energy_joules(self) -> float:
         return hw_lib.energy_joules(self.hw, self.duration_s,
-                                    self.utilization()) * self.chips
+                                    self.utilization()) \
+            * self.chips * max(self.replicas, 1)
 
     def co2_kg(self) -> float:
         return hw_lib.co2_kg(self.energy_joules())
 
     def cost_usd(self) -> float:
-        return hw_lib.cloud_cost_usd(self.hw.name, self.duration_s) * self.chips
+        return hw_lib.cloud_cost_usd(self.hw.name, self.duration_s) \
+            * self.chips * max(self.replicas, 1)
 
     def cost_per_1k_requests(self) -> float:
         n = len(self.traces)
@@ -93,8 +114,11 @@ class SimResult:
             "preprocess": float(np.mean([t.t_preprocess for t in self.traces])),
             "transmit": float(np.mean([t.t_transmit for t in self.traces])),
             "queue": float(np.mean([t.t_queue for t in self.traces])),
+            "batch_wait": float(np.mean([t.t_batch_wait
+                                         for t in self.traces])),
             "inference": float(np.mean([t.t_inference for t in self.traces])),
-            "postprocess": float(np.mean([t.t_postprocess for t in self.traces])),
+            "postprocess": float(np.mean([t.t_postprocess
+                                          for t in self.traces])),
         }
 
     def summary(self) -> Dict[str, float]:
@@ -106,6 +130,7 @@ class SimResult:
             "p99_s": self.percentile(99),
             "mean_s": float(np.mean(self.latencies())) if self.traces else 0.0,
             "utilization": self.utilization(),
+            "replicas": self.replicas,
             "energy_j": self.energy_joules(),
             "co2_kg": self.co2_kg(),
             "cost_usd": self.cost_usd(),
@@ -113,86 +138,197 @@ class SimResult:
         }
 
 
+@dataclasses.dataclass
+class _ActiveRequest:
+    """A request occupying a decode slot of a continuous engine."""
+    qreq: QueuedRequest
+    remaining: int          # tokens still to produce (prefill yields one)
+    context: int            # KV length so far
+    join_s: float
+
+
+class ReplicaEngine:
+    """One server timeline, steppable from an external event loop.
+
+    The loop calls ``next_action_s`` to learn when this replica next wants
+    the clock, advances global time, then calls ``act(now, traces)`` which
+    performs every action due at ``now`` and returns ``(done_s, request)``
+    completions (``done_s`` may lie in the future — inference started at
+    ``now`` finishes later; completions only feed closed-loop reissue).
+    """
+
+    def __init__(self, replica_id: int, policy: BatchPolicy,
+                 latency: LatencyModel, spawn_s: float = 0.0):
+        self.replica_id = replica_id
+        self.policy = policy
+        self.latency = latency
+        self.continuous = isinstance(policy, ContinuousBatcher)
+        self.spawn_s = spawn_s
+        self.queue: List[QueuedRequest] = []
+        self.server_free_at = spawn_s
+        self.busy_s = 0.0
+        self.served = 0
+        self.retired = False
+        # continuous-engine state
+        self.active: List[_ActiveRequest] = []
+        self.iter_end: Optional[float] = None
+        self._slot_free_s = spawn_s     # last time a decode slot opened
+        # memoized policy decision; every queue/clock mutation the engine
+        # can see changes (now, len(queue), server_free_at)
+        self._decision_key = None
+        self._decision = None
+
+    # ---- routing signals --------------------------------------------------
+    def load(self, now: float) -> int:
+        """In-flight work (queued + running) — the least-loaded signal."""
+        n = len(self.queue) + len(self.active)
+        if not self.continuous and self.server_free_at > now + EPS:
+            n += 1          # a batch currently occupies the server
+        return n
+
+    def idle(self, now: float) -> bool:
+        return (not self.queue and not self.active and self.iter_end is None
+                and self.server_free_at <= now + EPS)
+
+    # ---- event-loop interface --------------------------------------------
+    def enqueue(self, qreq: QueuedRequest) -> None:
+        self.queue.append(qreq)
+
+    def next_action_s(self, now: float) -> Optional[float]:
+        """Earliest time this replica can change state (None = nothing)."""
+        if self.continuous:
+            if self.iter_end is not None:
+                return self.iter_end
+            if self.queue or self.active:
+                return max(now, self.spawn_s)
+            return None
+        if not self.queue:
+            return None
+        decision = self._decide(now)
+        if decision is not None:
+            return max(now, decision[1])
+        fire = self.policy.earliest_fire(self.queue)
+        if fire is not None:
+            return max(fire, self.server_free_at)
+        return None
+
+    def _decide(self, now: float):
+        key = (now, len(self.queue), self.server_free_at)
+        if key != self._decision_key:
+            self._decision = self.policy.next_batch(self.queue, now,
+                                                    self.server_free_at)
+            self._decision_key = key
+        return self._decision
+
+    def act(self, now: float,
+            traces: Dict[int, RequestTrace]) -> List[Tuple[float, Request]]:
+        if self.continuous:
+            return self._act_continuous(now, traces)
+        return self._act_batched(now, traces)
+
+    # ---- request-level policies ------------------------------------------
+    def _act_batched(self, now, traces):
+        completions: List[Tuple[float, Request]] = []
+        while self.queue:
+            decision = self._decide(now)
+            if decision is None:
+                break
+            batch, fire_t = decision
+            if fire_t > now + EPS:
+                break
+            ids = {q.request.req_id for q in batch}
+            self.queue = [q for q in self.queue
+                          if q.request.req_id not in ids]
+            bsz = len(batch)
+            prompt = max(q.request.prompt_tokens for q in batch)
+            out_toks = max(q.request.output_tokens for q in batch)
+            infer_s = self.latency.request_latency(bsz, prompt, out_toks)
+            prev_free = self.server_free_at
+            start = max(now, prev_free)
+            self.server_free_at = start + infer_s
+            self.busy_s += infer_s
+            self.served += bsz
+            for q in batch:
+                tr = traces[q.request.req_id]
+                tr.replica = self.replica_id
+                tr.t_queue = start - q.enqueue_s
+                tr.t_batch_wait = max(
+                    0.0, start - max(q.enqueue_s, prev_free))
+                tr.t_inference = infer_s
+                tr.t_postprocess = POST_PROCESS_S
+                tr.batch_size = bsz
+                tr.done_s = self.server_free_at + POST_PROCESS_S
+                completions.append((tr.done_s, q.request))
+        return completions
+
+    # ---- continuous (token-level) engine ---------------------------------
+    def _act_continuous(self, now, traces):
+        completions: List[Tuple[float, Request]] = []
+        cap = self.policy.max_batch
+        if self.iter_end is not None and self.iter_end <= now + EPS:
+            end = self.iter_end
+            self.iter_end = None
+            was_full = len(self.active) >= cap
+            still: List[_ActiveRequest] = []
+            for a in self.active:
+                a.remaining -= 1
+                a.context += 1
+                if a.remaining <= 0:
+                    tr = traces[a.qreq.request.req_id]
+                    tr.t_inference = end - a.join_s
+                    tr.t_postprocess = POST_PROCESS_S
+                    tr.done_s = end + POST_PROCESS_S
+                    completions.append((tr.done_s, a.qreq.request))
+                    self.served += 1
+                else:
+                    still.append(a)
+            if was_full and len(still) < cap:
+                self._slot_free_s = end
+            self.active = still
+        if self.iter_end is None and (self.queue or self.active):
+            start = max(now, self.spawn_s)
+            joined: List[_ActiveRequest] = []
+            while (self.queue and len(self.active) + len(joined) < cap
+                   and len(joined) < self.policy.max_prefill):
+                q = self.queue.pop(0)
+                tr = traces[q.request.req_id]
+                tr.replica = self.replica_id
+                tr.t_queue = start - q.enqueue_s
+                tr.t_batch_wait = max(
+                    0.0, start - max(q.enqueue_s, self._slot_free_s))
+                joined.append(_ActiveRequest(
+                    qreq=q, remaining=q.request.output_tokens,
+                    context=q.request.prompt_tokens, join_s=start))
+            if joined or self.active:
+                n_decode = len(self.active)
+                max_ctx = max((a.context for a in self.active), default=0)
+                n_prefill = len(joined)
+                max_prompt = max((a.qreq.request.prompt_tokens
+                                  for a in joined), default=0)
+                t_iter = self.latency.iteration_latency(
+                    n_prefill, max_prompt, n_decode, max_ctx)
+                self.active.extend(joined)
+                bsz = len(self.active)
+                for a in self.active:
+                    tr = traces[a.qreq.request.req_id]
+                    tr.batch_size = max(tr.batch_size, bsz)
+                self.iter_end = start + t_iter
+                self.server_free_at = self.iter_end
+                self.busy_s += t_iter
+        return completions
+
+
 def simulate(workload: WorkloadSpec, policy: BatchPolicy,
              latency: LatencyModel, *, network: NetworkModel = NETWORKS["lan"],
              server_side_processing: bool = True) -> SimResult:
-    """Run the pipeline simulation; returns per-request traces + utilization.
+    """Run the single-replica pipeline simulation.
 
-    Closed-loop workloads (``kind="closed"``) start from one seed request
-    per client; each completion immediately reissues that client's next
-    request until ``duration_s``, keeping ``concurrency`` requests in
-    flight throughout.
+    This is the one-server special case of
+    :func:`repro.serving.cluster.simulate_cluster`; closed-loop workloads
+    (``kind="closed"``) reissue each client's next request on completion
+    until ``duration_s``.
     """
-    requests = generate(workload)
-    closed_loop = workload.kind == CLOSED
-    # arrival at the server = client arrival + preprocess + transmission
-    queue: List[QueuedRequest] = []
-    traces: Dict[int, RequestTrace] = {}
-    arrivals: List[Tuple[float, int, Request]] = []   # (server_arrival, id, r)
-
-    def admit(r: Request) -> None:
-        tr = RequestTrace(request=r, t_preprocess=PRE_PROCESS_S,
-                          t_transmit=network.transmit(r.payload_bytes))
-        traces[r.req_id] = tr
-        heapq.heappush(arrivals,
-                       (r.arrival_s + tr.t_preprocess + tr.t_transmit,
-                        r.req_id, r))
-
-    for r in requests:
-        admit(r)
-    next_id = len(requests)
-
-    now = 0.0
-    busy = 0.0
-    server_free_at = 0.0
-    while arrivals or queue:
-        # admit every arrival up to `now`
-        while arrivals and arrivals[0][0] <= now + 1e-12:
-            t_arr, _, r = heapq.heappop(arrivals)
-            queue.append(QueuedRequest(request=r, enqueue_s=t_arr))
-        decision = policy.next_batch(queue, now, server_free_at)
-        if decision is None:
-            # advance time to the next event (arrival or policy timeout)
-            candidates = []
-            if arrivals:
-                candidates.append(arrivals[0][0])
-            fire = policy.earliest_fire(queue)
-            if fire is not None:
-                candidates.append(max(fire, server_free_at))
-            if not candidates:
-                break
-            now = max(now, min(candidates))
-            continue
-        batch, fire_t = decision
-        if fire_t > now + 1e-12:
-            now = fire_t
-            continue  # re-admit arrivals before firing
-        # serve the batch
-        ids = {q.request.req_id for q in batch}
-        queue = [q for q in queue if q.request.req_id not in ids]
-        bsz = len(batch)
-        prompt = max(q.request.prompt_tokens for q in batch)
-        out_toks = max(q.request.output_tokens for q in batch)
-        infer_s = latency.request_latency(bsz, prompt, out_toks)
-        start = max(now, server_free_at)
-        server_free_at = start + infer_s
-        busy += infer_s
-        for q in batch:
-            tr = traces[q.request.req_id]
-            tr.t_queue = start - q.enqueue_s
-            tr.t_inference = infer_s
-            tr.t_postprocess = POST_PROCESS_S
-            tr.batch_size = bsz
-            tr.done_s = server_free_at + POST_PROCESS_S
-            if closed_loop and tr.done_s < workload.duration_s:
-                # the client observes the response and issues its next
-                # request, keeping its loop at concurrency 1
-                admit(dataclasses.replace(q.request, req_id=next_id,
-                                          arrival_s=tr.done_s))
-                next_id += 1
-        now = max(now, start)
-
-    done = [t for t in traces.values() if t.done_s > 0]
-    duration = max((t.done_s for t in done), default=0.0)
-    return SimResult(traces=done, busy_s=busy, duration_s=duration,
-                     hw=latency.hw, chips=latency.chips)
+    from repro.serving.cluster import ClusterSpec, simulate_cluster
+    return simulate_cluster(workload, policy, latency,
+                            cluster=ClusterSpec(replicas=1),
+                            network=network)

@@ -1,12 +1,16 @@
 """Workload generator (paper §4.2.2).
 
 Produces request arrival traces for the serving benchmarks: Poisson (the
-paper's primary mode), uniform, closed-loop, and spike/burst patterns.
+paper's primary mode), uniform, closed-loop, spike/burst patterns, stepped
+``ramp`` rate sweeps (for saturation-knee finding), and ``trace`` replay
+from recorded JSONL files (schema documented in ``configs/traces/``).
 Deterministic given a seed.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+from pathlib import Path
 from typing import List, Optional
 
 import numpy as np
@@ -15,6 +19,15 @@ POISSON = "poisson"
 UNIFORM = "uniform"
 BURST = "burst"
 CLOSED = "closed"
+RAMP = "ramp"
+TRACE = "trace"
+
+KINDS = (POISSON, UNIFORM, BURST, CLOSED, RAMP, TRACE)
+
+# JSONL trace-replay columns; only ``arrival_s`` is required per line, the
+# rest default to the WorkloadSpec values (see configs/traces/README.md).
+TRACE_FIELDS = ("arrival_s", "prompt_tokens", "output_tokens",
+                "payload_bytes", "session_id")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +37,7 @@ class Request:
     prompt_tokens: int
     output_tokens: int
     payload_bytes: int
+    session_id: int = 0             # client/session for affinity routing
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,14 +47,51 @@ class WorkloadSpec:
     duration_s: float = 60.0
     prompt_tokens: int = 128
     output_tokens: int = 1              # classification-style: 1 step
+    output_tokens_max: int = 0          # > output_tokens ⇒ per-request
+                                        # uniform sample in [min, max]
     payload_bytes: int = 150 * 1024     # ~one image
     burst_factor: float = 10.0          # rate multiplier inside a burst
     burst_fraction: float = 0.1         # fraction of time bursting
     concurrency: int = 8                # closed-loop clients
+    session_count: int = 4              # distinct sessions (affinity routing)
+    ramp_min_rate: float = 10.0         # ramp: first step's rate
+    ramp_max_rate: float = 200.0        # ramp: last step's rate
+    ramp_steps: int = 5                 # ramp: number of equal-length steps
+    trace_path: Optional[str] = None    # trace: JSONL file to replay
     seed: int = 0
 
 
+def ramp_step_rates(spec: WorkloadSpec) -> List[float]:
+    """The per-step arrival rates of a ``ramp`` workload (low → high)."""
+    denom = max(spec.ramp_steps - 1, 1)
+    return [spec.ramp_min_rate
+            + (spec.ramp_max_rate - spec.ramp_min_rate) * k / denom
+            for k in range(spec.ramp_steps)]
+
+
+def _load_trace(spec: WorkloadSpec) -> List[Request]:
+    if not spec.trace_path:
+        raise ValueError("kind='trace' needs WorkloadSpec.trace_path")
+    rows = []
+    for line in Path(spec.trace_path).read_text().splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        rows.append(json.loads(line))
+    rows.sort(key=lambda d: float(d["arrival_s"]))
+    return [
+        Request(req_id=i, arrival_s=float(d["arrival_s"]),
+                prompt_tokens=int(d.get("prompt_tokens", spec.prompt_tokens)),
+                output_tokens=int(d.get("output_tokens", spec.output_tokens)),
+                payload_bytes=int(d.get("payload_bytes", spec.payload_bytes)),
+                session_id=int(d.get("session_id", 0)))
+        for i, d in enumerate(rows)
+    ]
+
+
 def generate(spec: WorkloadSpec) -> List[Request]:
+    if spec.kind == TRACE:
+        return _load_trace(spec)
     rng = np.random.default_rng(spec.seed)
     times: List[float] = []
     if spec.kind == POISSON:
@@ -61,16 +112,41 @@ def generate(spec: WorkloadSpec) -> List[Request]:
             t += rng.exponential(1.0 / rate)
             if t < spec.duration_s:
                 times.append(t)
+    elif spec.kind == RAMP:
+        step_len = spec.duration_s / spec.ramp_steps
+        for k, rate in enumerate(ramp_step_rates(spec)):
+            t, end = k * step_len, (k + 1) * step_len
+            while True:
+                t += rng.exponential(1.0 / max(rate, 1e-9))
+                if t >= end:
+                    break
+                times.append(t)
     elif spec.kind == CLOSED:
-        # one seed request per client at t=0; simulator.simulate reissues
-        # each client's next request on completion until duration_s
+        # one seed request per client at t=0; the simulator reissues each
+        # client's next request on completion until duration_s
         times = [0.0] * spec.concurrency
     else:
         raise ValueError(spec.kind)
+
+    n = len(times)
+    if spec.kind == CLOSED:
+        # each closed-loop client is its own session (sticky routing keeps
+        # a client's loop on one replica)
+        sessions = np.arange(n)
+    elif spec.session_count > 1:
+        sessions = rng.integers(0, spec.session_count, size=n)
+    else:
+        sessions = np.zeros(n, dtype=int)
+    if spec.output_tokens_max > spec.output_tokens:
+        outs = rng.integers(spec.output_tokens, spec.output_tokens_max + 1,
+                            size=n)
+    else:
+        outs = np.full(n, spec.output_tokens, dtype=int)
     return [
         Request(req_id=i, arrival_s=float(t),
                 prompt_tokens=spec.prompt_tokens,
-                output_tokens=spec.output_tokens,
-                payload_bytes=spec.payload_bytes)
+                output_tokens=int(outs[i]),
+                payload_bytes=spec.payload_bytes,
+                session_id=int(sessions[i]))
         for i, t in enumerate(times)
     ]

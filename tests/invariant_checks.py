@@ -1,0 +1,106 @@
+"""Shared simulator invariant checks.
+
+Used both by the hypothesis property suite (``test_simulator_invariants``,
+gated on the hypothesis package) and by the deterministic cluster tests,
+so every invariant also runs on concrete examples in images without
+hypothesis installed.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.serving.batching import ContinuousBatcher, make_policy
+from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.latency_model import LatencyModel
+from repro.serving.simulator import SimResult
+from repro.serving.workload import CLOSED, WorkloadSpec, generate
+
+_LM = None
+
+
+def latency_model() -> LatencyModel:
+    """One shared (expensive to build) latency oracle for all checks."""
+    global _LM
+    if _LM is None:
+        _LM = LatencyModel(get_config("gemma2-2b"), chips=4)
+    return _LM
+
+
+def run_sim(workload: WorkloadSpec, policy_name: str, *,
+            replicas: int = 1, router: str = "round-robin",
+            autoscale: bool = False, **policy_kw) -> SimResult:
+    policy = make_policy(policy_name, **policy_kw)
+    return simulate_cluster(
+        workload, policy, latency_model(),
+        cluster=ClusterSpec(replicas=replicas, router=router,
+                            autoscale=autoscale))
+
+
+def policy_cap(policy_name: str, **policy_kw) -> int:
+    policy = make_policy(policy_name, **policy_kw)
+    if isinstance(policy, ContinuousBatcher):
+        return policy.max_batch
+    if hasattr(policy, "max_batch"):
+        return policy.max_batch
+    if hasattr(policy, "preferred"):
+        return max(policy.preferred)
+    return 1
+
+
+def check_all_complete_exactly_once(workload: WorkloadSpec,
+                                    res: SimResult) -> None:
+    """Every admitted request completes exactly once."""
+    served = [t.request.req_id for t in res.traces]
+    assert len(served) == len(set(served)), "a request completed twice"
+    if workload.kind != CLOSED:
+        expected = {r.req_id for r in generate(workload)}
+        assert set(served) == expected, (
+            f"served {len(served)} != admitted {len(expected)}")
+    else:
+        # closed loop admits dynamically; at least the seeds must finish
+        assert len(served) >= workload.concurrency
+    for t in res.traces:
+        assert t.done_s > 0
+
+
+def check_stage_sanity(res: SimResult, cap: int) -> None:
+    """t_queue >= 0, batch_wait within t_queue, batch sizes <= policy cap."""
+    for t in res.traces:
+        assert t.t_queue >= -1e-9, f"negative queue time {t.t_queue}"
+        assert -1e-9 <= t.t_batch_wait <= t.t_queue + 1e-9, (
+            f"batch_wait {t.t_batch_wait} outside [0, t_queue={t.t_queue}]")
+        assert t.t_inference > 0
+        assert 1 <= t.batch_size <= cap, (
+            f"batch size {t.batch_size} exceeds cap {cap}")
+
+
+def check_busy_bound(res: SimResult) -> None:
+    """Total server busy time fits inside duration × replicas."""
+    assert res.busy_s <= res.duration_s * res.replicas + 1e-6, (
+        f"busy {res.busy_s} > duration {res.duration_s} × "
+        f"{res.replicas} replicas")
+    assert 0.0 <= res.utilization() <= 1.0 + 1e-9
+    if res.per_replica_busy_s is not None:
+        assert sum(res.per_replica_busy_s) == res.busy_s
+
+
+def check_closed_concurrency(workload: WorkloadSpec, res: SimResult) -> None:
+    """Closed-loop in-flight never exceeds spec.concurrency."""
+    events = []
+    for t in res.traces:
+        events.append((t.request.arrival_s, 1))
+        events.append((t.done_s, -1))
+    # at equal times, process completions before the reissued arrivals
+    events.sort(key=lambda e: (e[0], e[1]))
+    inflight = peak = 0
+    for _, delta in events:
+        inflight += delta
+        peak = max(peak, inflight)
+    assert peak <= workload.concurrency, (
+        f"{peak} in flight > concurrency {workload.concurrency}")
+
+
+def check_duration_covers_window(workload: WorkloadSpec,
+                                 res: SimResult) -> None:
+    """Open-loop duration is max(workload window, last completion)."""
+    last_done = max((t.done_s for t in res.traces), default=0.0)
+    assert abs(res.duration_s - max(workload.duration_s, last_done)) < 1e-9

@@ -1,0 +1,266 @@
+"""Cluster simulator: continuous batching, routers, autoscaler, the
+duration/t_batch_wait fixes, and concrete runs of the shared invariant
+checks (the hypothesis-free twin of test_simulator_invariants)."""
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import BenchmarkJobSpec, ClusterSpec as CoreClusterSpec, \
+    run_stages
+from repro.core.analysis import saturation_knee, slo_attainment
+from repro.serving.batching import ContinuousBatcher, make_policy
+from repro.serving.cluster import (Autoscaler, ClusterSpec,
+                                   LeastLoadedRouter, make_router,
+                                   simulate_cluster)
+from repro.serving.latency_model import LatencyModel
+from repro.serving.simulator import simulate
+from repro.serving.workload import WorkloadSpec, generate
+
+from invariant_checks import (check_all_complete_exactly_once,
+                              check_busy_bound, check_closed_concurrency,
+                              check_duration_covers_window,
+                              check_stage_sanity, policy_cap, run_sim)
+
+SAMPLE_TRACE = str(Path(__file__).resolve().parent.parent
+                   / "configs" / "traces" / "sample.jsonl")
+
+
+@pytest.fixture(scope="module")
+def lat():
+    return LatencyModel(get_config("gemma2-2b"), chips=4)
+
+
+class TestContinuousBatcher:
+    def test_all_served_with_generation(self, lat):
+        wl = WorkloadSpec(rate=100, duration_s=2, output_tokens=4,
+                          output_tokens_max=16, seed=0)
+        res = simulate(wl, make_policy("continuous", max_batch=8), lat)
+        assert len(res.traces) == len(generate(wl))
+        assert all(1 <= t.batch_size <= 8 for t in res.traces)
+
+    def test_mid_batch_join(self, lat):
+        """A request arriving while a long batch decodes joins mid-batch
+        instead of waiting for the whole batch to finish."""
+        wl = WorkloadSpec(kind="uniform", rate=40, duration_s=1,
+                          output_tokens=64, seed=0)
+        res = simulate(wl, make_policy("continuous", max_batch=16), lat)
+        joined = [t for t in res.traces if t.batch_size > 1]
+        assert joined, "no request ever shared the running batch"
+        # queueing stays far below one full-request latency
+        solo = lat.request_latency(1, wl.prompt_tokens, wl.output_tokens)
+        late = [t for t in res.traces if t.request.arrival_s > 0.1]
+        assert late and min(t.t_queue for t in late) < solo
+
+    def test_continuous_beats_window_on_ramp(self, lat):
+        """Acceptance: ≥ window-batcher throughput at equal-or-better p99
+        on the ramp scenario."""
+        wl = WorkloadSpec(kind="ramp", duration_s=3, ramp_min_rate=50,
+                          ramp_max_rate=400, ramp_steps=3,
+                          output_tokens=8, output_tokens_max=32, seed=0)
+        win = simulate(wl, make_policy("tfs", max_batch=16,
+                                       timeout_s=0.01), lat)
+        cont = simulate(wl, make_policy("continuous", max_batch=16), lat)
+        assert cont.throughput() >= win.throughput()
+        assert cont.percentile(99) <= win.percentile(99)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            ContinuousBatcher(max_batch=0)
+        with pytest.raises(TypeError):
+            ContinuousBatcher().next_batch([], 0.0, 0.0)
+
+
+class TestClusterSpecValidation:
+    def test_rejects_zero_replicas(self):
+        with pytest.raises(ValueError):
+            ClusterSpec(replicas=0)
+
+    def test_rejects_scale_to_zero(self):
+        """min_replicas=0 would let the autoscaler retire the last
+        replica; the cluster can never scale back up from zero (backlog
+        is only observed on live replicas), so reject it up front."""
+        with pytest.raises(ValueError):
+            ClusterSpec(autoscale=True, min_replicas=0)
+        with pytest.raises(ValueError):
+            ClusterSpec(min_replicas=2, max_replicas=1)
+
+
+class TestRouters:
+    def test_make_router_aliases(self):
+        assert make_router("jsq").name == "least-loaded"
+        assert make_router("rr").name == "round-robin"
+        assert make_router("session").name == "affinity"
+        with pytest.raises(ValueError):
+            make_router("nope")
+
+    def test_affinity_is_sticky(self, lat):
+        wl = WorkloadSpec(rate=150, duration_s=2, session_count=6,
+                          output_tokens=2, seed=1)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(replicas=3, router="affinity"))
+        by_session = {}
+        for t in res.traces:
+            by_session.setdefault(t.request.session_id, set()).add(t.replica)
+        assert all(len(reps) == 1 for reps in by_session.values())
+
+    def test_least_loaded_spreads(self, lat):
+        wl = WorkloadSpec(rate=400, duration_s=2, output_tokens=4, seed=2)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(replicas=4, router="least-loaded"))
+        used = {t.replica for t in res.traces}
+        assert used == {0, 1, 2, 3}
+
+    def test_four_replicas_sustain_3x_single_rate(self, lat):
+        """Acceptance: a 4-replica least-loaded cluster sustains ≥ 3× the
+        single-replica saturation rate."""
+        def saturation(replicas):
+            last = None
+            for rate in (100, 200, 300, 400, 600, 800, 1200, 1600):
+                wl = WorkloadSpec(rate=rate, duration_s=2, output_tokens=8,
+                                  output_tokens_max=32, seed=3)
+                res = simulate_cluster(
+                    wl, make_policy("continuous", max_batch=16), lat,
+                    cluster=ClusterSpec(replicas=replicas,
+                                        router="least-loaded"))
+                if res.duration_s > 1.1 * wl.duration_s \
+                        or res.percentile(99) > 0.25:
+                    break
+                last = rate
+            return last
+
+        single, quad = saturation(1), saturation(4)
+        assert single and quad and quad >= 3 * single
+
+
+class TestAutoscaler:
+    def test_scales_up_under_backlog(self, lat):
+        wl = WorkloadSpec(rate=600, duration_s=2, output_tokens=8, seed=4)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(replicas=1, autoscale=True, max_replicas=4,
+                                scale_interval_s=0.2, spawn_delay_s=0.1))
+        assert 1 < res.replicas <= 4
+        fixed = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(replicas=1))
+        assert res.percentile(99) < fixed.percentile(99)
+
+    def test_respects_max_replicas(self, lat):
+        wl = WorkloadSpec(rate=800, duration_s=1.5, output_tokens=8, seed=5)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=4), lat,
+            cluster=ClusterSpec(replicas=1, autoscale=True, max_replicas=2,
+                                scale_interval_s=0.2, spawn_delay_s=0.1))
+        assert res.replicas <= 2
+        check_busy_bound(res)
+
+
+class TestSatelliteFixes:
+    def test_sparse_open_loop_duration_not_inflated(self, lat):
+        """Regression: duration_s = max(workload window, last completion),
+        so a sparse workload no longer inflates throughput/utilization."""
+        wl = WorkloadSpec(rate=1, duration_s=10, seed=0)
+        res = simulate(wl, make_policy("none"), lat)
+        n = len(generate(wl))
+        assert res.duration_s == pytest.approx(10.0)
+        assert res.throughput() == pytest.approx(n / 10.0)
+
+    def test_overload_extends_duration(self, lat):
+        wl = WorkloadSpec(rate=4000, duration_s=1, output_tokens=8, seed=1)
+        res = simulate(wl, make_policy("tfs", max_batch=8,
+                                       timeout_s=0.002), lat)
+        last_done = max(t.done_s for t in res.traces)
+        assert res.duration_s == pytest.approx(last_done)
+        assert res.duration_s > 1.0
+
+    def test_batch_wait_populated_and_in_stage_means(self, lat):
+        """A lone request under a window batcher waits out the timeout:
+        that wait is batching-attributable, hence t_batch_wait ≈ t_queue."""
+        wl = WorkloadSpec(rate=2, duration_s=1, seed=2)
+        res = simulate(wl, make_policy("tfs", max_batch=8,
+                                       timeout_s=0.05), lat)
+        means = res.stage_means()
+        assert "batch_wait" in means and means["batch_wait"] > 0.04
+        for t in res.traces:
+            assert t.t_batch_wait == pytest.approx(t.t_queue)
+            assert t.t_batch_wait >= 0.05 - 1e-9
+
+    def test_batch_wait_zero_when_server_is_bottleneck(self, lat):
+        """NoBatching never holds requests: all queueing is server-busy
+        wait, none batching-attributable."""
+        wl = WorkloadSpec(rate=2000, duration_s=0.5, seed=3)
+        res = simulate(wl, make_policy("none"), lat)
+        assert max(t.t_batch_wait for t in res.traces) < 1e-9
+        assert max(t.t_queue for t in res.traces) > 0
+
+
+class TestConcreteInvariants:
+    """The hypothesis-gated invariants on fixed examples (always run)."""
+
+    CASES = [
+        ("poisson", "tfs", {"max_batch": 8, "timeout_s": 0.004}, 1),
+        ("burst", "tris", {"preferred": (8, 4, 2, 1)}, 2),
+        ("ramp", "continuous", {"max_batch": 8, "max_prefill": 4}, 3),
+        ("uniform", "none", {}, 2),
+    ]
+
+    @pytest.mark.parametrize("kind,policy,kw,replicas", CASES)
+    def test_invariants(self, kind, policy, kw, replicas):
+        wl = WorkloadSpec(kind=kind, rate=120, duration_s=1.5,
+                          output_tokens=2, output_tokens_max=6,
+                          ramp_min_rate=30, ramp_max_rate=150,
+                          ramp_steps=3, seed=11)
+        res = run_sim(wl, policy, replicas=replicas,
+                      router="least-loaded", **kw)
+        check_all_complete_exactly_once(wl, res)
+        check_stage_sanity(res, policy_cap(policy, **kw))
+        check_busy_bound(res)
+        check_duration_covers_window(wl, res)
+
+    def test_closed_loop_concurrency(self):
+        wl = WorkloadSpec(kind="closed", concurrency=5, duration_s=1,
+                          output_tokens=2, seed=12)
+        res = run_sim(wl, "continuous", replicas=2, router="affinity",
+                      max_batch=4)
+        check_all_complete_exactly_once(wl, res)
+        check_closed_concurrency(wl, res)
+        check_busy_bound(res)
+
+
+class TestEndToEndPlumbing:
+    def test_spec_round_trip_with_cluster(self):
+        spec = BenchmarkJobSpec(
+            job_id="c0", cluster=CoreClusterSpec(replicas=4,
+                                                 router="least-loaded"),
+            workload=WorkloadSpec(kind="trace", trace_path=SAMPLE_TRACE))
+        again = BenchmarkJobSpec.from_dict(spec.to_dict())
+        assert again == spec
+        assert again.cluster.replicas == 4
+
+    def test_run_stages_cluster_metrics(self):
+        spec = BenchmarkJobSpec(
+            job_id="c1", chips=4, slo_latency_s=0.5,
+            software={"policy": "continuous", "max_batch": 8},
+            cluster=CoreClusterSpec(replicas=2, router="least-loaded"),
+            workload=WorkloadSpec(rate=100, duration_s=1, output_tokens=2,
+                                  seed=0))
+        spec = BenchmarkJobSpec.from_dict(spec.to_dict())
+        result = run_stages(spec)
+        assert result.metrics["replicas"] == 2
+        assert 0.0 <= result.metrics["slo_attainment"] <= 1.0
+        assert result.cluster["router"] == "least-loaded"
+        assert len(result.cluster["per_replica_busy_s"]) == 2
+        rec = result.to_record()
+        assert rec["cluster"]["replicas"] == 2
+        from repro.core import JobResult
+        assert JobResult.from_record(rec).cluster == result.cluster
+        assert rec["stages"]["batch_wait"] >= 0.0
+
+    def test_analysis_helpers(self):
+        assert slo_attainment([0.1, 0.2, 0.4], 0.25) == pytest.approx(2 / 3)
+        assert slo_attainment([], 0.25) == 0.0
+        assert saturation_knee([10, 20, 40], [0.1, 0.2, 0.9], 0.25) == 20
+        assert saturation_knee([10, 20], [0.9, 1.0], 0.25) is None

@@ -1,0 +1,98 @@
+"""Property-based simulator invariants (hypothesis; gated in conftest.py).
+
+The invariants that make the simulator citable (FlexBench's argument:
+benchmark numbers are only as good as the harness they come from):
+
+  * every admitted request completes exactly once,
+  * per-request stage sanity: t_queue >= 0, t_batch_wait within t_queue,
+    batch sizes never exceed the policy cap,
+  * total busy_s <= duration_s × replicas (utilization <= 1),
+  * closed-loop in-flight never exceeds spec.concurrency.
+
+Each property runs through the full cluster event loop across workload
+kinds, batching policies, replica counts and routers.
+"""
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.workload import WorkloadSpec
+
+from invariant_checks import (check_all_complete_exactly_once,
+                              check_busy_bound, check_closed_concurrency,
+                              check_duration_covers_window,
+                              check_stage_sanity, policy_cap, run_sim)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+open_kinds = st.sampled_from(["poisson", "uniform", "burst", "ramp"])
+policies = st.sampled_from(["none", "tfs", "tris", "continuous"])
+routers = st.sampled_from(["round-robin", "least-loaded", "affinity"])
+
+
+def _policy_kw(policy, max_batch):
+    if policy == "tfs":
+        return {"max_batch": max_batch, "timeout_s": 0.004}
+    if policy == "tris":
+        return {"preferred": tuple(sorted({max_batch, 2, 1}, reverse=True))}
+    if policy == "continuous":
+        return {"max_batch": max_batch, "max_prefill": max(max_batch // 2, 1)}
+    return {}
+
+
+@st.composite
+def open_workloads(draw):
+    return WorkloadSpec(
+        kind=draw(open_kinds),
+        rate=draw(st.floats(20, 250)),
+        duration_s=draw(st.floats(0.3, 1.5)),
+        prompt_tokens=draw(st.integers(16, 256)),
+        output_tokens=draw(st.integers(1, 4)),
+        output_tokens_max=draw(st.sampled_from([0, 8])),
+        payload_bytes=4096,
+        ramp_min_rate=draw(st.floats(10, 50)),
+        ramp_max_rate=draw(st.floats(60, 300)),
+        ramp_steps=draw(st.integers(2, 5)),
+        session_count=draw(st.integers(1, 6)),
+        seed=draw(st.integers(0, 2**16)),
+    )
+
+
+@given(wl=open_workloads(), policy=policies,
+       max_batch=st.integers(1, 16), replicas=st.integers(1, 4),
+       router=routers)
+@settings(**SETTINGS)
+def test_conservation_and_stages(wl, policy, max_batch, replicas, router):
+    kw = _policy_kw(policy, max_batch)
+    res = run_sim(wl, policy, replicas=replicas, router=router, **kw)
+    check_all_complete_exactly_once(wl, res)
+    check_stage_sanity(res, policy_cap(policy, **kw))
+    check_busy_bound(res)
+    check_duration_covers_window(wl, res)
+
+
+@given(wl=open_workloads(), max_batch=st.integers(1, 16),
+       autoscale=st.booleans())
+@settings(**SETTINGS)
+def test_autoscaled_cluster_invariants(wl, max_batch, autoscale):
+    kw = _policy_kw("continuous", max_batch)
+    res = run_sim(wl, "continuous", replicas=1, autoscale=autoscale, **kw)
+    check_all_complete_exactly_once(wl, res)
+    check_stage_sanity(res, policy_cap("continuous", **kw))
+    check_busy_bound(res)
+
+
+@given(concurrency=st.integers(1, 8), policy=policies,
+       max_batch=st.integers(1, 8), replicas=st.integers(1, 3),
+       router=routers, duration=st.floats(0.2, 0.8),
+       out_tokens=st.integers(1, 4), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_closed_loop_concurrency_cap(concurrency, policy, max_batch,
+                                     replicas, router, duration,
+                                     out_tokens, seed):
+    wl = WorkloadSpec(kind="closed", concurrency=concurrency,
+                      duration_s=duration, output_tokens=out_tokens,
+                      payload_bytes=4096, seed=seed)
+    kw = _policy_kw(policy, max_batch)
+    res = run_sim(wl, policy, replicas=replicas, router=router, **kw)
+    check_all_complete_exactly_once(wl, res)
+    check_closed_concurrency(wl, res)
+    check_busy_bound(res)
