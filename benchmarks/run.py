@@ -23,7 +23,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 def run_config(args) -> None:
     from repro.core import (BenchmarkSession, ConcurrentFollowerExecutor,
-                            InlineExecutor, PerfDB)
+                            InlineExecutor, PerfDB, PlanSpec)
     from repro.core.analysis import leaderboard, recommend
 
     executor = (ConcurrentFollowerExecutor() if args.executor == "concurrent"
@@ -40,7 +40,8 @@ def run_config(args) -> None:
     print(f"# executed {len(results)} jobs in {time.time()-t0:.1f}s")
     print(leaderboard(session.db, sort_by="throughput_rps", limit=20))
     slos = sorted({r.spec.slo_latency_s for r in results
-                   if r.spec.slo_latency_s is not None})
+                   if getattr(r.spec, "slo_latency_s", None) is not None
+                   and not isinstance(r.spec, PlanSpec)})
     for slo in slos:
         print(f"\n# top configs under p99 <= {slo*1e3:.0f} ms:")
         for rec in recommend(session.db, slo_latency_s=slo):

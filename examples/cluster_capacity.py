@@ -5,19 +5,36 @@ Sweeps replicas × policy over a ramped generation workload through the
 declarative BenchmarkSession front end, then picks the cheapest
 configuration that meets the SLO at 99% attainment.
 
+By default the sweep is clocked by the analytic roofline model; pass a
+fitted calibration profile (path or ``model@hardware`` key, see
+``configs/profiles/``) to clock it by measured/fitted coefficients
+instead:
+
     PYTHONPATH=src python examples/cluster_capacity.py
+    PYTHONPATH=src python examples/cluster_capacity.py \\
+        --profile gemma2-2b@tpu-v5e
 """
+import argparse
+
 from repro.core import (BenchmarkJobSpec, BenchmarkSession, ClusterSpec,
                         SweepSpec)
 from repro.serving.workload import WorkloadSpec
 
 SLO_S = 0.25
 
+parser = argparse.ArgumentParser(description=__doc__)
+parser.add_argument("--profile", default=None,
+                    help="calibration profile (JSON path or model@hardware "
+                         "key) to use as the latency oracle instead of the "
+                         "hard-coded analytic model")
+args = parser.parse_args()
+
 base = BenchmarkJobSpec(
     job_id="capacity",
     model={"name": "gemma2-2b"},
     chips=4,
     slo_latency_s=SLO_S,
+    profile=args.profile,
     software={"policy": "continuous", "max_batch": 16, "max_prefill": 8},
     cluster=ClusterSpec(replicas=1, router="least-loaded"),
     workload=WorkloadSpec(kind="ramp", duration_s=3, ramp_min_rate=50,
@@ -33,6 +50,8 @@ session = BenchmarkSession(n_workers=4)
 session.submit_sweep(sweep)
 results = session.run()
 
+oracle = args.profile if args.profile else "analytic roofline model"
+print(f"latency oracle: {oracle}\n")
 print(f"{'job':14s} {'policy':11s} {'replicas':>8} {'thr rps':>9} "
       f"{'p99 ms':>8} {'SLO att':>8} {'util':>6}")
 for r in sorted(results, key=lambda r: (r.spec.software.policy,

@@ -1,0 +1,40 @@
+"""repro.calibrate — automatic latency-model calibration + SLO-aware
+capacity planning (measure → model → plan).
+
+The loop InferBench promises (§4.2.5: the *system* turns measurements
+into deployment insight):
+
+  1. **measure** — :mod:`.microbench` sweeps prefill/decode latency over
+     a (batch × seq) grid (real CPU execution for generated models, the
+     kernel-validated roofline oracle for registered archs), emitting
+     ``kind="calibration"`` PerfDB records;
+  2. **model** — :mod:`.fit` least-squares fits the parametric
+     ``FittedLatencyModel`` coefficients with residual diagnostics and
+     persists them as named :mod:`.profile` JSONs under
+     ``configs/profiles/``, keyed by (model, hardware);
+  3. **plan** — :mod:`.planner` reloads a profile and searches a
+     replicas × batching-policy × router grid with the cluster simulator
+     for the cheapest configuration meeting a latency SLO target.
+
+All three run through ``BenchmarkSession.submit`` via
+``CalibrationSpec`` / ``PlanSpec``, the ``benchmarks/bench_calibrate.py``
+CLI, or directly through the functions re-exported here.
+"""
+from repro.calibrate.fit import fit_phase, fit_records, split_points
+from repro.calibrate.microbench import (fit_calibration, measured_records,
+                                        oracle_records, run_calibration_job,
+                                        sweep_calibration)
+from repro.calibrate.planner import (PlanCandidate, PlanResult, plan_capacity,
+                                     plan_from_spec, run_plan_job)
+from repro.calibrate.profile import (DEFAULT_PROFILE_DIR, PROFILE_SCHEMA,
+                                     CalibrationProfile, PhaseFit,
+                                     load_profile, profile_path)
+
+__all__ = [
+    "CalibrationProfile", "PhaseFit", "PlanCandidate", "PlanResult",
+    "DEFAULT_PROFILE_DIR", "PROFILE_SCHEMA",
+    "fit_calibration", "fit_phase", "fit_records", "load_profile",
+    "measured_records", "oracle_records", "plan_capacity", "plan_from_spec",
+    "profile_path", "run_calibration_job", "run_plan_job", "split_points",
+    "sweep_calibration",
+]

@@ -1,0 +1,144 @@
+"""SLO-aware capacity planner (the plan step of measure → model → plan).
+
+Loads a calibration profile, clocks the multi-replica cluster simulator
+with its fitted latency oracle, and searches a replicas × batching-policy
+× router grid for the cheapest configuration whose SLO attainment meets
+the target.  Cost comes from the same ``repro.hw`` cloud-rate/energy
+model the benchmark results use, so planned and benchmarked dollars are
+directly comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.calibrate.profile import CalibrationProfile, load_profile
+from repro.core.results import JobResult
+from repro.core.spec import PlanSpec
+from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.latency_model import NETWORKS
+from repro.serving.workload import WorkloadSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCandidate:
+    """One simulated configuration of the planning grid."""
+    replicas: int
+    policy: str
+    router: str
+    metrics: Dict[str, float]       # SimResult.summary() + slo_attainment
+    meets_slo: bool
+    objective: float                # the minimized metric's value
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResult:
+    """The full grid, sorted feasible-first then by objective."""
+    profile_key: str
+    slo_latency_s: float
+    slo_target: float
+    objective: str
+    candidates: List[PlanCandidate]
+
+    @property
+    def best(self) -> Optional[PlanCandidate]:
+        feasible = [c for c in self.candidates if c.meets_slo]
+        return min(feasible, key=lambda c: c.objective) if feasible else None
+
+    def to_dict(self) -> Dict[str, Any]:
+        best = self.best
+        return {
+            "profile_key": self.profile_key,
+            "slo_latency_s": self.slo_latency_s,
+            "slo_target": self.slo_target,
+            "objective": self.objective,
+            "best": best.to_dict() if best else None,
+            "candidates": [c.to_dict() for c in self.candidates],
+        }
+
+
+def _policy(name: str, max_batch: int, max_prefill: int):
+    from repro.core.session import resolve_policy
+    from repro.core.spec import SoftwareSpec
+    return resolve_policy(SoftwareSpec(policy=name, max_batch=max_batch,
+                                       max_prefill=max_prefill))
+
+
+def plan_capacity(profile, workload: WorkloadSpec, *,
+                  slo_latency_s: float, slo_target: float = 0.99,
+                  replicas: Sequence[int] = (1, 2, 4),
+                  policies: Sequence[str] = ("tfs", "continuous"),
+                  routers: Sequence[str] = ("least-loaded",),
+                  max_batch: int = 16, max_prefill: int = 8,
+                  network: str = "lan",
+                  objective: str = "cost_per_1k_req") -> PlanResult:
+    """Search the configuration grid for the cheapest SLO-meeting setup.
+
+    ``profile`` may be a :class:`CalibrationProfile`, its dict/JSON-path/
+    ``model@hardware`` form, or any ready ``LatencyOracle`` (so a plan
+    can also be run against the analytic roofline model directly).
+    """
+    if isinstance(profile, CalibrationProfile):
+        oracle, key = profile.to_latency_model(), profile.key
+    elif isinstance(profile, (str, dict)):
+        from repro.serving.latency_model import FittedLatencyModel
+        oracle = FittedLatencyModel.from_profile(profile)
+        key = oracle.name
+    else:
+        oracle, key = profile, getattr(profile, "name", "oracle")
+
+    candidates: List[PlanCandidate] = []
+    for n, pol, router in itertools.product(replicas, policies, routers):
+        res = simulate_cluster(
+            workload, _policy(pol, max_batch, max_prefill), oracle,
+            cluster=ClusterSpec(replicas=int(n), router=router),
+            network=NETWORKS[network])
+        metrics = dict(res.summary(),
+                       slo_attainment=res.slo_attainment(slo_latency_s))
+        if objective not in metrics:
+            raise ValueError(
+                f"unknown plan objective {objective!r} "
+                f"(available: {sorted(metrics)})")
+        candidates.append(PlanCandidate(
+            replicas=int(n), policy=pol, router=router, metrics=metrics,
+            meets_slo=metrics["slo_attainment"] >= slo_target,
+            objective=float(metrics[objective])))
+    candidates.sort(key=lambda c: (not c.meets_slo, c.objective))
+    return PlanResult(profile_key=key, slo_latency_s=slo_latency_s,
+                      slo_target=slo_target, objective=objective,
+                      candidates=candidates)
+
+
+def plan_from_spec(spec: PlanSpec) -> PlanResult:
+    profile = load_profile(spec.profile, spec.profile_dir)
+    return plan_capacity(
+        profile, spec.workload, slo_latency_s=spec.slo_latency_s,
+        slo_target=spec.slo_target, replicas=spec.replicas,
+        policies=spec.policies, routers=spec.routers,
+        max_batch=spec.max_batch, max_prefill=spec.max_prefill,
+        network=spec.network, objective=spec.objective)
+
+
+def run_plan_job(spec: PlanSpec) -> JobResult:
+    """BenchmarkSession stage runner for a plan submission."""
+    t0 = time.time()
+    plan = plan_from_spec(spec)
+    best = plan.best
+    metrics: Dict[str, Any] = {
+        "mode": "plan",
+        "profile_key": plan.profile_key,
+        "slo_latency_s": spec.slo_latency_s,
+        "slo_target": spec.slo_target,
+        "objective": spec.objective,
+        "candidates": len(plan.candidates),
+        "feasible": sum(c.meets_slo for c in plan.candidates),
+        "best": best.to_dict() if best else None,
+        "plan": plan.to_dict(),
+    }
+    return JobResult(spec=spec, metrics=metrics,
+                     benchmark_wall_s=time.time() - t0)

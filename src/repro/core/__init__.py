@@ -5,13 +5,15 @@ from repro.core.scheduler import ClusterScheduler, evaluate_schedulers
 from repro.core.session import (BenchmarkSession, ConcurrentFollowerExecutor,
                                 Executor, Follower, InlineExecutor, JobHandle,
                                 execute_job, resolve_policy, run_stages)
-from repro.core.spec import (BenchmarkJobSpec, ClusterSpec, ModelRef,
-                             SoftwareSpec, SweepSpec, load_jobs)
+from repro.core.spec import (BenchmarkJobSpec, CalibrationSpec, ClusterSpec,
+                             ModelRef, PlanSpec, SoftwareSpec, SweepSpec,
+                             load_jobs, spec_from_dict)
 
 __all__ = [
     "BenchmarkSession", "ConcurrentFollowerExecutor", "Executor", "Follower",
     "InlineExecutor", "JobHandle", "execute_job", "resolve_policy",
     "run_stages", "JobResult", "ScheduleInfo", "StageBreakdown", "Leader",
     "PerfDB", "ClusterScheduler", "evaluate_schedulers", "BenchmarkJobSpec",
-    "ClusterSpec", "ModelRef", "SoftwareSpec", "SweepSpec", "load_jobs",
+    "CalibrationSpec", "ClusterSpec", "ModelRef", "PlanSpec", "SoftwareSpec",
+    "SweepSpec", "load_jobs", "spec_from_dict",
 ]

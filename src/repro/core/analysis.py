@@ -24,17 +24,21 @@ def cdf(values: Sequence[float], points: int = 100) -> Tuple[List[float], List[f
 # ---- heat maps (Fig. 9) ----------------------------------------------------
 def heatmap(db: PerfDB, *, row_key: str, col_key: str, value_key: str,
             **filters) -> Dict[str, Any]:
-    """Pivot PerfDB records into a (rows × cols) matrix of means."""
+    """Pivot PerfDB records into a (rows × cols) matrix of means.
+
+    Dotted keys resolve through :meth:`PerfDB.get_path`; zero matching
+    records yield an empty matrix rather than an error.
+    """
     recs = db.query(**filters)
-    def get(rec, key):
-        node = rec
-        for p in key.split("."):
-            node = node.get(p) if isinstance(node, dict) else None
-            if node is None:
-                return None
-        return node
+    get = PerfDB.get_path
+    empty = {"rows": [], "cols": [], "matrix": [],
+             "row_key": row_key, "col_key": col_key, "value_key": value_key}
+    if not recs:
+        return empty
     rows = sorted({get(r, row_key) for r in recs} - {None})
     cols = sorted({get(r, col_key) for r in recs} - {None})
+    if not rows or not cols:
+        return empty
     mat = np.full((len(rows), len(cols)), np.nan)
     for r in recs:
         rv, cv, val = get(r, row_key), get(r, col_key), get(r, value_key)
@@ -99,6 +103,60 @@ def saturation_knee(rates: Sequence[float], p99s: Sequence[float],
     return knee
 
 
+# ---- calibration fit quality + capacity plan (repro.calibrate) -------------
+def fit_report(profile) -> str:
+    """Human-readable fit-quality report for a ``CalibrationProfile``.
+
+    Duck-typed (profile objects or their dict form) so the analysis
+    layer stays import-light.
+    """
+    if isinstance(profile, dict):
+        from repro.calibrate.profile import CalibrationProfile
+        profile = CalibrationProfile.from_dict(profile)
+    lines = [f"calibration profile: {profile.key}  "
+             f"(chips={profile.chips}, source={profile.source})"]
+    for phase, names in (("prefill", ("base_s", "per_token_s",
+                                      "per_token_per_prompt_s")),
+                         ("decode", ("base_s", "alpha_s", "beta_s"))):
+        fit = getattr(profile, phase)
+        coef = "  ".join(f"{n}={c:.3e}" for n, c in zip(names, fit.coef))
+        lines.append(f"  {phase:8s} {coef}")
+        if fit.derived_from:
+            lines.append(f"  {'':8s} (derived from {fit.derived_from}; "
+                         "no measured points)")
+        else:
+            lines.append(f"  {'':8s} n={fit.n_points}  "
+                         f"mean|rel err|={fit.mean_rel_err:.1%}  "
+                         f"max={fit.max_rel_err:.1%}  R²={fit.r2:.4f}")
+    if profile.holdout:
+        h = profile.holdout
+        lines.append("  holdout  " + "  ".join(
+            f"{k}={v:.1%}" if k.endswith("rel_err") else f"{k}={v:g}"
+            for k, v in sorted(h.items())))
+    return "\n".join(lines)
+
+
+def plan_table(plan) -> str:
+    """Render a ``PlanResult`` grid: feasible configs first, best starred."""
+    best = plan.best
+    header = (f"capacity plan vs {plan.profile_key}: "
+              f"SLO p(e2e ≤ {plan.slo_latency_s * 1e3:.0f}ms) ≥ "
+              f"{plan.slo_target:.0%}, minimize {plan.objective}")
+    cols = f"{'':2s}{'replicas':>9}{'policy':>12}{'router':>14}" \
+           f"{'thr rps':>9}{'p99 ms':>8}{'slo':>6}{plan.objective:>16}"
+    lines = [header, cols]
+    for c in plan.candidates:
+        m = c.metrics
+        star = "* " if best is not None and c == best else \
+            ("  " if c.meets_slo else "x ")
+        lines.append(f"{star}{c.replicas:>9}{c.policy:>12}{c.router:>14}"
+                     f"{m['throughput_rps']:>9.1f}{m['p99_s'] * 1e3:>8.1f}"
+                     f"{m['slo_attainment']:>6.2f}{c.objective:>16.5f}")
+    if best is None:
+        lines.append("  (no configuration met the SLO target)")
+    return "\n".join(lines)
+
+
 # ---- recommender (paper's utility function) --------------------------------
 def recommend(db: PerfDB, *, slo_latency_s: float, metric: str = "p99_s",
               objective: str = "cost_per_1k_req", top: int = 3,
@@ -116,6 +174,10 @@ def leaderboard(db: PerfDB, *, sort_by: str = "throughput_rps",
                 ascending: bool = False, limit: int = 20,
                 **filters) -> str:
     recs = [r for r in db.query(**filters) if "result" in r]
+    if "kind" not in filters:
+        # calibration grid points / plan records aren't serving results;
+        # keep them out unless a kind is asked for explicitly
+        recs = [r for r in recs if r.get("kind", "benchmark") == "benchmark"]
     recs.sort(key=lambda r: r["result"].get(sort_by, 0.0), reverse=not ascending)
     cols = ["job_id", "arch", "policy", "chips", "throughput_rps",
             "p50_s", "p99_s", "utilization", "cost_per_1k_req"]

@@ -36,6 +36,19 @@ def _dense(key, i, o):
     return jax.random.normal(key, (i, o), jnp.float32) / math.sqrt(i)
 
 
+def example_inputs(spec: GeneratedSpec) -> Tuple:
+    """The example input batch for a spec — separate from ``build`` so
+    latency sweeps can vary (batch, seq) without re-initializing params
+    (which depend only on family/layers/width)."""
+    if spec.family == "fc":
+        return (jnp.ones((spec.batch, spec.width), jnp.float32),)
+    if spec.family == "cnn":
+        return (jnp.ones((spec.batch, 32, 32, 3), jnp.float32),)
+    if spec.family in ("lstm", "transformer"):
+        return (jnp.ones((spec.batch, spec.seq, spec.width), jnp.float32),)
+    raise ValueError(spec.family)
+
+
 def build(spec: GeneratedSpec) -> Tuple[Dict, Callable, Tuple]:
     """Returns (params, apply_fn, example_inputs)."""
     key = jax.random.key(hash(spec.name) % (2 ** 31))
@@ -54,8 +67,7 @@ def build(spec: GeneratedSpec) -> Tuple[Dict, Callable, Tuple]:
                 return jnp.tanh(h @ w), None
             h, _ = jax.lax.scan(body, h, p["layers"])
             return h @ p["out"]
-        x = jnp.ones((spec.batch, W), jnp.float32)
-        return params, apply, (x,)
+        return params, apply, example_inputs(spec)
 
     if spec.family == "cnn":
         C = max(W // 16, 8)
@@ -78,8 +90,7 @@ def build(spec: GeneratedSpec) -> Tuple[Dict, Callable, Tuple]:
                 return jax.nn.relu(y) + h, None      # residual block
             h, _ = jax.lax.scan(body, h, p["layers"])
             return h.mean(axis=(1, 2)) @ p["out"]
-        x = jnp.ones((spec.batch, 32, 32, 3), jnp.float32)
-        return params, apply, (x,)
+        return params, apply, example_inputs(spec)
 
     if spec.family == "lstm":
         def cell_w(k):
@@ -110,8 +121,7 @@ def build(spec: GeneratedSpec) -> Tuple[Dict, Callable, Tuple]:
                 return lstm_layer(w, hs), None
             hs, _ = jax.lax.scan(body, hs, p["layers"])
             return hs[-1] @ p["out"]
-        x = jnp.ones((spec.batch, spec.seq, W), jnp.float32)
-        return params, apply, (x,)
+        return params, apply, example_inputs(spec)
 
     if spec.family == "transformer":
         H = max(W // 64, 1)
@@ -144,8 +154,7 @@ def build(spec: GeneratedSpec) -> Tuple[Dict, Callable, Tuple]:
                 return h, None
             h, _ = jax.lax.scan(body, h, p["layers"])
             return h[:, -1] @ p["out"]
-        x = jnp.ones((spec.batch, spec.seq, W), jnp.float32)
-        return params, apply, (x,)
+        return params, apply, example_inputs(spec)
 
     raise ValueError(spec.family)
 

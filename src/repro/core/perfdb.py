@@ -10,7 +10,7 @@ import json
 import threading
 import time
 from pathlib import Path
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from typing import Any, Dict, List, Optional
 
 
 class PerfDB:
@@ -26,28 +26,49 @@ class PerfDB:
                         self._records.append(json.loads(line))
 
     # ---- write ------------------------------------------------------------
-    def insert(self, record: Dict[str, Any]) -> None:
+    def append(self, record: Dict[str, Any]) -> None:
+        """Write-through append: memory + JSONL line under one lock.
+
+        The line is serialized outside the file write and emitted as a
+        single ``write`` followed by a flush, so concurrent executor
+        workers appending from different threads can never interleave
+        partial JSONL lines.
+        """
         record = dict(record)
         record.setdefault("ts", time.time())
+        line = json.dumps(record) + "\n"
         with self._lock:
             self._records.append(record)
             if self.path:
                 self.path.parent.mkdir(parents=True, exist_ok=True)
                 with self.path.open("a") as f:
-                    f.write(json.dumps(record) + "\n")
+                    f.write(line)
+                    f.flush()
+
+    def insert(self, record: Dict[str, Any]) -> None:
+        """Alias of :meth:`append` (the original name)."""
+        self.append(record)
 
     # ---- query ------------------------------------------------------------
+    @staticmethod
+    def get_path(record: Dict[str, Any], key: str) -> Any:
+        """Dotted-path lookup into a nested record (``"result.p99_s"``).
+
+        Returns ``None`` when any path component is missing or the node
+        it names is not a dict — dotted filters are first-class in both
+        :meth:`query` and the analysis heat maps.
+        """
+        node = record
+        for part in key.split("."):
+            if not isinstance(node, dict) or part not in node:
+                return None
+            node = node[part]
+        return node
+
     def query(self, **eq) -> List[Dict[str, Any]]:
         """Equality filter over (possibly dotted) record keys."""
-        def get(rec, key):
-            node = rec
-            for part in key.split("."):
-                if not isinstance(node, dict) or part not in node:
-                    return None
-                node = node[part]
-            return node
         return [r for r in self._records
-                if all(get(r, k) == v for k, v in eq.items())]
+                if all(self.get_path(r, k) == v for k, v in eq.items())]
 
     def all(self) -> List[Dict[str, Any]]:
         return list(self._records)

@@ -9,9 +9,10 @@ unchanged — only the in-process representation is now structured.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Mapping, Optional
+from typing import Any, Dict, List, Mapping, Optional
 
-from repro.core.spec import BenchmarkJobSpec
+from repro.core.spec import (AnyJobSpec, BenchmarkJobSpec, CalibrationSpec,
+                             PlanSpec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,7 +66,7 @@ class JobResult:
     ``result`` field: throughput/percentiles/cost for simulated serving,
     roofline numbers for generated models); treat it as read-only.
     """
-    spec: BenchmarkJobSpec
+    spec: AnyJobSpec
     metrics: Dict[str, Any]
     stages: Optional[StageBreakdown] = None
     cold_start_s: Optional[float] = None
@@ -74,6 +75,10 @@ class JobResult:
     schedule: Optional[ScheduleInfo] = None
     benchmark_wall_s: float = 0.0
     ts: Optional[float] = None
+    # side-channel records the session also persists to PerfDB (e.g. the
+    # per-grid-point kind="calibration" measurements behind a fitted
+    # profile); not part of this result's own record
+    extra_records: Optional[List[Dict[str, Any]]] = None
 
     # ---- convenience accessors -------------------------------------------
     @property
@@ -92,18 +97,43 @@ class JobResult:
 
     # ---- PerfDB JSONL schema ---------------------------------------------
     def to_record(self) -> Dict[str, Any]:
-        """The flat PerfDB record (unchanged legacy schema)."""
+        """The flat PerfDB record.
+
+        Benchmark jobs keep the unchanged legacy schema; calibration and
+        plan jobs add a top-level ``kind`` plus their own provenance
+        columns (``extra_records`` are *not* folded in — the session
+        persists those as sibling rows).
+        """
         spec = self.spec
-        rec: Dict[str, Any] = {
-            "job_id": spec.job_id,
-            "user": spec.user,
-            "arch": spec.model.name,
-            "hardware": spec.hardware,
-            "chips": spec.chips,
-            "policy": spec.software.policy,
-            "network": spec.network,
-            "spec": spec.to_dict(),
-        }
+        if isinstance(spec, CalibrationSpec):
+            rec = {
+                "job_id": spec.job_id,
+                "user": spec.user,
+                "kind": spec.kind,
+                "arch": spec.model.label,
+                "hardware": spec.hardware,
+                "chips": spec.chips,
+                "spec": spec.to_dict(),
+            }
+        elif isinstance(spec, PlanSpec):
+            rec = {
+                "job_id": spec.job_id,
+                "user": spec.user,
+                "kind": spec.kind,
+                "profile": spec.profile,
+                "spec": spec.to_dict(),
+            }
+        else:
+            rec = {
+                "job_id": spec.job_id,
+                "user": spec.user,
+                "arch": spec.model.name,
+                "hardware": spec.hardware,
+                "chips": spec.chips,
+                "policy": spec.software.policy,
+                "network": spec.network,
+                "spec": spec.to_dict(),
+            }
         if self.generated is not None:
             rec["generated"] = dict(self.generated)
         rec["result"] = dict(self.metrics)
@@ -122,8 +152,11 @@ class JobResult:
 
     @classmethod
     def from_record(cls, rec: Mapping[str, Any]) -> "JobResult":
+        spec_cls = {"calibration": CalibrationSpec,
+                    "plan": PlanSpec}.get(rec.get("kind", "benchmark"),
+                                          BenchmarkJobSpec)
         return cls(
-            spec=BenchmarkJobSpec.from_dict(rec["spec"]),
+            spec=spec_cls.from_dict(rec["spec"]),
             metrics=dict(rec.get("result", {})),
             stages=(StageBreakdown.from_dict(rec["stages"])
                     if "stages" in rec else None),

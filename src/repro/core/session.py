@@ -38,14 +38,15 @@ from repro.core import generator as gen_lib
 from repro.core.perfdb import PerfDB
 from repro.core.results import JobResult, ScheduleInfo, StageBreakdown
 from repro.core.scheduler import ClusterScheduler, Job, ScheduledJob
-from repro.core.spec import (BenchmarkJobSpec, SoftwareSpec, SweepSpec,
-                             load_jobs)
+from repro.core.spec import (AnyJobSpec, BenchmarkJobSpec, CalibrationSpec,
+                             PlanSpec, SoftwareSpec, SweepSpec, load_jobs,
+                             spec_from_dict)
 from repro.serving.batching import BatchPolicy, make_policy
 from repro.serving.cluster import simulate_cluster
-from repro.serving.latency_model import (LatencyModel, MeasuredLatency,
-                                         NETWORKS)
+from repro.serving.latency_model import (FittedLatencyModel, LatencyModel,
+                                         MeasuredLatency, NETWORKS)
 
-JobLike = Union[BenchmarkJobSpec, Mapping[str, Any], str, Path]
+JobLike = Union[AnyJobSpec, Mapping[str, Any], str, Path]
 
 
 def resolve_policy(sw: SoftwareSpec) -> BatchPolicy:
@@ -62,8 +63,19 @@ def resolve_policy(sw: SoftwareSpec) -> BatchPolicy:
     return make_policy("tris", preferred=tuple(sw.preferred))
 
 
-def run_stages(spec: BenchmarkJobSpec) -> JobResult:
-    """Stages 1–3 for one job; pure w.r.t. session state (thread-safe)."""
+def run_stages(spec: AnyJobSpec) -> JobResult:
+    """Stages 1–3 for one job; pure w.r.t. session state (thread-safe).
+
+    Calibration and plan submissions dispatch to their own stage runners
+    in :mod:`repro.calibrate` (lazy imports keep the core importable
+    without pulling the calibration stack in)."""
+    if isinstance(spec, CalibrationSpec):
+        from repro.calibrate.microbench import run_calibration_job
+        return run_calibration_job(spec)
+    if isinstance(spec, PlanSpec):
+        from repro.calibrate.planner import run_plan_job
+        return run_plan_job(spec)
+
     t0 = time.time()
     hwm = hw_lib.HARDWARE[spec.hardware]
 
@@ -92,12 +104,20 @@ def run_stages(spec: BenchmarkJobSpec) -> JobResult:
             },
             benchmark_wall_s=time.time() - t0)
 
-    cfg = get_config(spec.model.name)
-    lat = LatencyModel(cfg, hw=hwm, chips=spec.chips, int8=spec.software.int8)
+    if spec.profile:
+        # calibrated oracle: the fitted profile replaces the analytic
+        # roofline model (its hardware/chips define the cost context)
+        lat = FittedLatencyModel.from_profile(spec.profile)
+    else:
+        cfg = get_config(spec.model.name)
+        lat = LatencyModel(cfg, hw=hwm, chips=spec.chips,
+                           int8=spec.software.int8)
     policy = resolve_policy(spec.software)
     res = simulate_cluster(spec.workload, policy, lat, cluster=spec.cluster,
                            network=NETWORKS[spec.network])
-    metrics = dict(res.summary(), mode="roofline-model")
+    metrics = dict(res.summary(),
+                   mode="fitted-profile" if spec.profile
+                   else "roofline-model")
     if spec.slo_latency_s is not None:
         metrics["slo_attainment"] = res.slo_attainment(spec.slo_latency_s)
     return JobResult(
@@ -135,7 +155,7 @@ class Follower:
 class JobHandle:
     """Future for one submitted job; resolved when its executor runs it."""
 
-    def __init__(self, spec: BenchmarkJobSpec):
+    def __init__(self, spec: AnyJobSpec):
         self.spec = spec
         self._done = threading.Event()
         self._result: Optional[JobResult] = None
@@ -173,7 +193,7 @@ class PlacedJob:
     sched: ScheduledJob
 
     @property
-    def spec(self) -> BenchmarkJobSpec:
+    def spec(self) -> AnyJobSpec:
         return self.handle.spec
 
     def schedule_info(self) -> ScheduleInfo:
@@ -281,13 +301,16 @@ class BenchmarkSession:
         self._results: List[JobResult] = []
 
     # ---- submission -------------------------------------------------------
-    def _coerce(self, job: JobLike) -> BenchmarkJobSpec:
-        if isinstance(job, BenchmarkJobSpec):
+    def _coerce(self, job: JobLike) -> AnyJobSpec:
+        if isinstance(job, (BenchmarkJobSpec, CalibrationSpec, PlanSpec)):
             return job
         if isinstance(job, Mapping):
-            return BenchmarkJobSpec.from_dict(dict(job))
+            # dicts dispatch on their optional "kind" field
+            # (benchmark | calibration | plan)
+            return spec_from_dict(dict(job))
         raise TypeError(f"cannot submit {type(job).__name__}; expected "
-                        "BenchmarkJobSpec, dict, or a config-file path")
+                        "BenchmarkJobSpec/CalibrationSpec/PlanSpec, dict, "
+                        "or a config-file path")
 
     def submit(self, job: JobLike) -> JobHandle:
         """Queue one job (spec, dict, or single-job config file)."""
@@ -342,7 +365,11 @@ class BenchmarkSession:
                         "(another job aborted the run)"))
 
     def _record(self, result: JobResult) -> None:
-        self.db.insert(result.to_record())
+        # side-channel rows first (e.g. per-grid-point calibration
+        # records), then the job's own record — both write-through
+        for rec in result.extra_records or ():
+            self.db.append(dict(rec))
+        self.db.append(result.to_record())
         self._results.append(result)
 
     def results(self) -> List[JobResult]:

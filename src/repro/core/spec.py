@@ -50,6 +50,14 @@ class ModelRef:
     width: int = 256
     batch_hint: int = 1
 
+    @property
+    def label(self) -> str:
+        """Stable display/profile key: the arch id, or the generated
+        model's canonical ``family-Ln-Wm`` name."""
+        if self.kind == "generated":
+            return f"{self.family}-L{self.layers}-W{self.width}"
+        return self.name
+
 
 @dataclasses.dataclass(frozen=True)
 class SoftwareSpec:
@@ -76,6 +84,10 @@ class BenchmarkJobSpec:
     slo_latency_s: Optional[float] = None
     metrics: Sequence[str] = ("latency", "throughput", "cost", "utilization")
     est_processing_s: float = 1.0   # scheduler hint (paper: known a priori)
+    # calibrated oracle: profile JSON path or "model@hardware" key — when
+    # set, serving is clocked by the fitted profile instead of the
+    # analytic roofline model (hardware/chips then come from the profile)
+    profile: Optional[str] = None
 
     def __post_init__(self):
         # accept plain dicts for the nested specs (declarative construction)
@@ -155,11 +167,123 @@ class SweepSpec:
             yield BenchmarkJobSpec.from_dict(d)
 
 
-def load_jobs(path: Union[str, Path]) -> List[BenchmarkJobSpec]:
+# ---- calibration + capacity planning (repro.calibrate) ---------------------
+@dataclasses.dataclass(frozen=True)
+class CalibrationSpec:
+    """A microbenchmark sweep → fitted latency profile (measure → model).
+
+    Generated models (``model.kind == "generated"``) are executed for
+    real on CPU per grid point; registered archs are swept through the
+    kernel-validated analytic roofline oracle.  The resulting records
+    land in PerfDB under ``kind="calibration"`` and the least-squares
+    fit is persisted as a named profile when ``profile_dir`` is set.
+    """
+    job_id: str
+    user: str = "dev"
+    model: ModelRef = ModelRef(kind="generated", family="fc",
+                               layers=2, width=64)
+    hardware: str = "cpu-xeon"
+    chips: int = 1
+    batches: Sequence[int] = (1, 2, 4, 8)
+    seqs: Sequence[int] = (16, 32, 64, 128)
+    contexts: Sequence[int] = ()        # decode KV lengths; () → ``seqs``
+    mode: str = "auto"                  # auto | measured | oracle
+    repeats: int = 10                   # measured-mode timing iterations
+                                        # (min-of-N per pass, two passes)
+    holdout_fraction: float = 0.25      # grid points held out for validation
+    profile_dir: Optional[str] = None   # save the fitted profile JSON here
+    est_processing_s: float = 1.0       # scheduler hint
+
+    kind = "calibration"
+
+    def __post_init__(self):
+        if isinstance(self.model, dict):
+            object.__setattr__(self, "model", ModelRef(**self.model))
+        for field in ("batches", "seqs", "contexts"):
+            val = getattr(self, field)
+            if isinstance(val, list):
+                object.__setattr__(self, field, tuple(val))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(dataclasses.asdict(self), kind=self.kind)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CalibrationSpec":
+        d = dict(d)
+        d.pop("kind", None)
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """An SLO-aware capacity-planning job (model → plan).
+
+    Loads a calibration profile (path or ``model@hardware`` key), drives
+    the cluster simulator over a replicas × batching-policy × router
+    grid, and reports the cheapest configuration whose SLO attainment
+    meets ``slo_target``.
+    """
+    job_id: str
+    profile: str                         # profile path or model@hardware key
+    user: str = "dev"
+    profile_dir: str = "configs/profiles"
+    workload: WorkloadSpec = WorkloadSpec()
+    slo_latency_s: float = 0.25
+    slo_target: float = 0.99             # required attainment fraction
+    replicas: Sequence[int] = (1, 2, 4)
+    policies: Sequence[str] = ("tfs", "continuous")
+    routers: Sequence[str] = ("least-loaded",)
+    max_batch: int = 16
+    max_prefill: int = 8
+    network: str = "lan"
+    objective: str = "cost_per_1k_req"   # minimized among SLO-feasible
+    est_processing_s: float = 1.0        # scheduler hint
+
+    kind = "plan"
+
+    def __post_init__(self):
+        if isinstance(self.workload, dict):
+            object.__setattr__(self, "workload",
+                               WorkloadSpec(**self.workload))
+        for field in ("replicas", "policies", "routers"):
+            val = getattr(self, field)
+            if isinstance(val, list):
+                object.__setattr__(self, field, tuple(val))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(dataclasses.asdict(self), kind=self.kind)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PlanSpec":
+        d = dict(d)
+        d.pop("kind", None)
+        return cls(**d)
+
+
+AnyJobSpec = Union[BenchmarkJobSpec, CalibrationSpec, PlanSpec]
+
+_SPEC_KINDS = {"benchmark": BenchmarkJobSpec, "calibration": CalibrationSpec,
+               "plan": PlanSpec}
+
+
+def spec_from_dict(d: Dict[str, Any]) -> AnyJobSpec:
+    """Dict → typed spec, dispatching on the optional ``kind`` field
+    (``benchmark`` when absent)."""
+    kind = d.get("kind", "benchmark")
+    cls = _SPEC_KINDS.get(kind)
+    if cls is None:
+        raise ValueError(f"unknown job kind {kind!r} "
+                         f"(expected one of {sorted(_SPEC_KINDS)})")
+    d = {k: v for k, v in d.items() if k != "kind"}
+    return cls(**d) if cls is not BenchmarkJobSpec \
+        else BenchmarkJobSpec.from_dict(d)
+
+
+def load_jobs(path: Union[str, Path]) -> List[AnyJobSpec]:
     """Expand a config file into concrete job specs.
 
     Accepted layouts (JSON or TOML):
-      * a single job object,
+      * a single job object (optionally ``kind: calibration | plan``),
       * ``{"base": {...}, "axes": {...}}`` — a sweep, expanded here,
       * ``{"jobs": [{...}, ...]}`` — an explicit job list.
     """
@@ -167,5 +291,5 @@ def load_jobs(path: Union[str, Path]) -> List[BenchmarkJobSpec]:
     if "base" in data:
         return list(SweepSpec.from_dict(data).expand())
     if "jobs" in data:
-        return [BenchmarkJobSpec.from_dict(j) for j in data["jobs"]]
-    return [BenchmarkJobSpec.from_dict(data)]
+        return [spec_from_dict(j) for j in data["jobs"]]
+    return [spec_from_dict(data)]

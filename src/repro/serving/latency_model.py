@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 from repro import hw as hw_lib
 from repro.models.config import ModelConfig
@@ -25,8 +25,44 @@ COLD_START_DISK_BW = 2e9       # bytes/s from checkpoint storage
 COLD_START_CONST_S = 2.0       # runtime + compile cache init
 
 
+class LatencyOracle:
+    """Shared per-request composition over a prefill/decode split.
+
+    Concrete oracles (the analytic :class:`LatencyModel`, the calibrated
+    :class:`FittedLatencyModel`) supply ``prefill_latency(batch, prompt)``
+    and ``decode_latency(batch, context)``; everything the simulator
+    calls on top of those is defined once here.
+    """
+    hw: hw_lib.HardwareModel
+    chips: int
+
+    def prefill_latency(self, batch: int, prompt: int) -> float:
+        raise NotImplementedError
+
+    def decode_latency(self, batch: int, context: int) -> float:
+        raise NotImplementedError
+
+    def iteration_latency(self, n_prefill: int, prompt: int,
+                          n_decode: int, max_context: int) -> float:
+        """One continuous-batching engine iteration (Orca-style): prefill
+        the requests joining this boundary, then one decode step for the
+        whole running batch."""
+        t = 0.0
+        if n_prefill > 0:
+            t += self.prefill_latency(n_prefill, prompt)
+        if n_decode > 0:
+            t += self.decode_latency(n_decode, max(max_context, 1))
+        return t
+
+    def request_latency(self, batch: int, prompt: int, out_tokens: int) -> float:
+        t = self.prefill_latency(batch, prompt)
+        for i in range(out_tokens - 1):
+            t += self.decode_latency(batch, prompt + i)
+        return t
+
+
 @dataclasses.dataclass
-class LatencyModel:
+class LatencyModel(LatencyOracle):
     cfg: ModelConfig
     hw: hw_lib.HardwareModel = hw_lib.TPU_V5E
     chips: int = 1
@@ -78,40 +114,111 @@ class LatencyModel:
         memory_s = (weight_bytes + kv_bytes) / (self.chips * self.hw.hbm_bw)
         return max(compute_s, memory_s) + LAUNCH_OVERHEAD_S
 
-    def iteration_latency(self, n_prefill: int, prompt: int,
-                          n_decode: int, max_context: int) -> float:
-        """One continuous-batching engine iteration (Orca-style): prefill
-        the requests joining this boundary, then one decode step for the
-        whole running batch."""
-        t = 0.0
-        if n_prefill > 0:
-            t += self.prefill_latency(n_prefill, prompt)
-        if n_decode > 0:
-            t += self.decode_latency(n_decode, max(max_context, 1))
-        return t
-
-    def request_latency(self, batch: int, prompt: int, out_tokens: int) -> float:
-        t = self.prefill_latency(batch, prompt)
-        for i in range(out_tokens - 1):
-            t += self.decode_latency(batch, prompt + i)
-        return t
-
     def cold_start(self) -> float:
         weight_bytes = self.n_params * self.serve_bytes_per_param
         return COLD_START_CONST_S + weight_bytes / (self.chips * COLD_START_DISK_BW)
 
+    def to_profile(self, *, batches=(1, 2, 4, 8, 16),
+                   seqs=(32, 64, 128, 256), contexts=None,
+                   holdout_fraction: float = 0.0):
+        """Fit this oracle's analytic grid into a calibration profile
+        (``repro.calibrate`` round-trip — see ``CalibrationProfile``)."""
+        from repro.calibrate.fit import fit_records
+        from repro.calibrate.microbench import oracle_records
+        records = oracle_records(self, batches=batches, seqs=seqs,
+                                 contexts=contexts)
+        return fit_records(
+            records, model=self.cfg.name, hardware=self.hw.name,
+            chips=self.chips, source="oracle",
+            holdout_fraction=holdout_fraction,
+            cold_start_s=self.cold_start())
+
+
+@dataclasses.dataclass
+class FittedLatencyModel(LatencyOracle):
+    """Parametric latency oracle backed by calibrated coefficients.
+
+    The closed forms are linear in their parameters (what the
+    ``repro.calibrate`` least-squares fitter recovers):
+
+        prefill(b, s) = p0 + p1·(b·s) + p2·(b·s²)
+        decode(b, c)  = d0 + α·b + β·(b·c)
+
+    ``p1`` is the prefill FLOPs term, ``p2`` the quadratic-attention
+    term; ``α`` is the per-sequence decode-step cost and ``β`` the
+    per-cached-token (KV read) cost.  Latencies are clamped to a small
+    positive floor so a degenerate fit can never stall the simulator.
+    """
+    prefill_coef: Tuple[float, float, float] = (0.0, 0.0, 0.0)
+    decode_coef: Tuple[float, float, float] = (0.0, 0.0, 0.0)
+    hw: hw_lib.HardwareModel = hw_lib.TPU_V5E
+    chips: int = 1
+    cold_start_s: float = COLD_START_CONST_S
+    name: str = "fitted"
+
+    _FLOOR_S = 1e-9
+
+    def prefill_latency(self, batch: int, prompt: int) -> float:
+        p0, p1, p2 = self.prefill_coef
+        toks = batch * prompt
+        return max(p0 + p1 * toks + p2 * toks * prompt, self._FLOOR_S)
+
+    def decode_latency(self, batch: int, context: int) -> float:
+        d0, alpha, beta = self.decode_coef
+        return max(d0 + alpha * batch + beta * batch * context,
+                   self._FLOOR_S)
+
+    def cold_start(self) -> float:
+        return self.cold_start_s
+
+    @classmethod
+    def from_profile(cls, profile) -> "FittedLatencyModel":
+        """Build the oracle from a ``CalibrationProfile``, its dict form,
+        a profile JSON path, or a ``model@hardware`` key resolved in the
+        default profile directory."""
+        from repro.calibrate.profile import CalibrationProfile, load_profile
+        if isinstance(profile, dict):
+            profile = CalibrationProfile.from_dict(profile)
+        elif not isinstance(profile, CalibrationProfile):
+            profile = load_profile(profile)
+        if profile.hardware not in hw_lib.HARDWARE:
+            raise ValueError(
+                f"profile {profile.key!r} names unknown hardware "
+                f"{profile.hardware!r} (known: {sorted(hw_lib.HARDWARE)}) — "
+                "costs/energy would be computed for the wrong machine")
+        hw = hw_lib.HARDWARE[profile.hardware]
+        return cls(prefill_coef=tuple(profile.prefill.coef),
+                   decode_coef=tuple(profile.decode.coef),
+                   hw=hw, chips=profile.chips,
+                   cold_start_s=profile.cold_start_s,
+                   name=profile.key)
+
 
 @dataclasses.dataclass
 class MeasuredLatency:
-    """Wall-clock a real jitted callable (CPU-scale models)."""
+    """Wall-clock a real jitted callable (CPU-scale models).
+
+    ``reducer="mean"`` (default) averages one timed loop, matching the
+    historical behavior; ``reducer="min"`` times each iteration and
+    takes the fastest — the noise-robust estimator the calibration
+    microbenchmarks use (scheduler jitter only ever adds time).
+    """
     fn: Callable
     warmup: int = 2
     iters: int = 5
+    reducer: str = "mean"
 
     def measure(self, *args) -> float:
         import jax
         for _ in range(self.warmup):
             jax.block_until_ready(self.fn(*args))
+        if self.reducer == "min":
+            best = math.inf
+            for _ in range(self.iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(self.fn(*args))
+                best = min(best, time.perf_counter() - t0)
+            return best
         t0 = time.perf_counter()
         for _ in range(self.iters):
             jax.block_until_ready(self.fn(*args))

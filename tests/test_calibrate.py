@@ -1,0 +1,369 @@
+"""repro.calibrate: fit round-trips, profile persistence, the SLO-aware
+planner, session integration of CalibrationSpec/PlanSpec, and the PerfDB
+dotted-path/append satellites."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.calibrate import (CalibrationProfile, fit_records, load_profile,
+                             oracle_records, plan_capacity, profile_path,
+                             run_calibration_job, run_plan_job,
+                             sweep_calibration)
+from repro.configs import get_config
+from repro.core import (BenchmarkJobSpec, BenchmarkSession, CalibrationSpec,
+                        JobResult, ModelRef, PerfDB, PlanSpec, SoftwareSpec,
+                        resolve_policy, run_stages, spec_from_dict)
+from repro.core.analysis import fit_report, heatmap, plan_table
+from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.latency_model import FittedLatencyModel, LatencyModel
+from repro.serving.workload import WorkloadSpec
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# a full-rank grid: batch and seq both vary so every design column is live
+BATCHES = (1, 2, 4, 8)
+SEQS = (16, 32, 64, 128)
+
+KNOWN = FittedLatencyModel(prefill_coef=(2e-3, 5e-6, 1.5e-8),
+                           decode_coef=(1e-3, 2e-4, 3e-7), chips=4)
+
+
+def known_records(**kw):
+    return oracle_records(KNOWN, batches=BATCHES, seqs=SEQS, **kw)
+
+
+def fit_known(**kw):
+    return fit_records(known_records(), model="known", hardware="tpu-v5e",
+                       chips=4, source="oracle", **kw)
+
+
+# ---- fitter ----------------------------------------------------------------
+def test_fit_recovers_known_model_within_5pct():
+    prof = fit_known()
+    for got, want in zip(prof.prefill.coef + prof.decode.coef,
+                         KNOWN.prefill_coef + KNOWN.decode_coef):
+        assert got == pytest.approx(want, rel=0.05)
+    # and the fit is essentially exact on its own grid
+    assert prof.prefill.mean_rel_err < 1e-6
+    assert prof.decode.mean_rel_err < 1e-6
+    assert prof.prefill.r2 > 0.999999
+
+
+def test_holdout_generalizes_within_15pct():
+    prof = fit_known(holdout_fraction=0.25)
+    assert prof.holdout is not None
+    assert prof.holdout["mean_rel_err"] <= 0.15
+    assert prof.holdout["prefill_points"] > 0
+
+
+def test_fit_rejects_empty_and_derives_missing_decode():
+    with pytest.raises(ValueError):
+        fit_records([], model="m", hardware="tpu-v5e")
+    prefill_only = [r for r in known_records() if r["phase"] == "prefill"]
+    prof = fit_records(prefill_only, model="m", hardware="tpu-v5e")
+    assert prof.decode.derived_from == "prefill"
+    p0, p1, p2 = prof.prefill.coef
+    assert prof.decode.coef == pytest.approx((p0, p1 + p2, 0.0))
+
+
+def test_fit_pins_degenerate_columns_to_zero():
+    # prompt never varies (fc-style grid): the quadratic column duplicates
+    # the linear one and must be dropped, not poison the solve
+    recs = [{"phase": "prefill", "batch": b, "tokens": 1,
+             "result": {"latency_s": 1e-3 + 2e-5 * b}}
+            for b in (1, 2, 4, 8, 16)]
+    prof = fit_records(recs, model="fc", hardware="cpu-xeon")
+    assert prof.prefill.coef[2] == 0.0
+    assert prof.prefill.coef[0] == pytest.approx(1e-3, rel=1e-6)
+    assert prof.prefill.mean_rel_err < 1e-9
+
+
+def test_fitted_model_floors_degenerate_latency():
+    lm = FittedLatencyModel(prefill_coef=(0.0, 0.0, 0.0),
+                            decode_coef=(0.0, 0.0, 0.0))
+    assert lm.prefill_latency(4, 128) > 0
+    assert lm.decode_latency(4, 128) > 0
+    assert lm.request_latency(4, 128, 8) > 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(scale=st.floats(min_value=1e-2, max_value=1e3))
+    def test_fit_is_scale_invariant(scale):
+        """Scaling every measured latency by k scales every fitted
+        coefficient by k (fitting hardware-independent shape)."""
+        base = fit_known()
+        scaled_records = known_records()
+        for rec in scaled_records:
+            rec["result"]["latency_s"] *= scale
+        scaled = fit_records(scaled_records, model="known",
+                             hardware="tpu-v5e", chips=4, source="oracle")
+        for got, want in zip(scaled.prefill.coef + scaled.decode.coef,
+                             base.prefill.coef + base.decode.coef):
+            assert got == pytest.approx(want * scale, rel=1e-4, abs=1e-15)
+
+
+# ---- profiles --------------------------------------------------------------
+def test_profile_json_roundtrip_and_key_loading(tmp_path):
+    prof = fit_known(holdout_fraction=0.25)
+    path = prof.save(tmp_path)
+    assert path == profile_path(tmp_path, "known", "tpu-v5e")
+    back = CalibrationProfile.from_json(path.read_text())
+    assert back.prefill == prof.prefill and back.decode == prof.decode
+    assert back.key == "known@tpu-v5e"
+    # by path and by model@hardware key
+    assert load_profile(path).prefill == prof.prefill
+    assert load_profile("known@tpu-v5e", tmp_path).prefill == prof.prefill
+    with pytest.raises(FileNotFoundError):
+        load_profile("missing@tpu-v5e", tmp_path)
+    # schema versioning is enforced
+    bad = dict(prof.to_dict(), schema="repro.calibration-profile.v999")
+    with pytest.raises(ValueError):
+        CalibrationProfile.from_dict(bad)
+
+
+def test_from_profile_reproduces_predictions(tmp_path):
+    prof = fit_known()
+    lm = FittedLatencyModel.from_profile(prof)
+    assert lm.chips == 4 and lm.hw.name == "tpu-v5e"
+    for b in BATCHES:
+        for s in SEQS:
+            assert lm.prefill_latency(b, s) == \
+                pytest.approx(KNOWN.prefill_latency(b, s), rel=0.05)
+            assert lm.decode_latency(b, s) == \
+                pytest.approx(KNOWN.decode_latency(b, s), rel=0.05)
+    # dict and path forms build the same oracle
+    via_dict = FittedLatencyModel.from_profile(prof.to_dict())
+    via_path = FittedLatencyModel.from_profile(str(prof.save(tmp_path)))
+    assert via_dict.prefill_coef == via_path.prefill_coef == lm.prefill_coef
+    # unknown hardware must fail loudly, not silently cost as tpu-v5e
+    with pytest.raises(ValueError, match="unknown hardware"):
+        FittedLatencyModel.from_profile(
+            dict(prof.to_dict(), hardware="tpu-v9x"))
+
+
+def test_latency_model_to_profile_roundtrip():
+    analytic = LatencyModel(get_config("gemma2-2b"), chips=4)
+    prof = analytic.to_profile(holdout_fraction=0.25)
+    assert prof.key == "gemma2-2b@tpu-v5e"
+    assert prof.cold_start_s == pytest.approx(analytic.cold_start())
+    fitted = prof.to_latency_model()
+    # decode is exactly linear in the roofline model → near-exact fit
+    assert prof.decode.mean_rel_err < 0.01
+    for b, c in ((1, 64), (4, 256), (16, 512)):
+        assert fitted.decode_latency(b, c) == \
+            pytest.approx(analytic.decode_latency(b, c), rel=0.05)
+    assert fit_report(prof)        # renders
+
+
+# ---- microbench ------------------------------------------------------------
+def test_measured_fc_sweep_and_fit():
+    spec = CalibrationSpec(
+        job_id="cal-fc-test",
+        model=ModelRef(kind="generated", family="fc", layers=1, width=32),
+        batches=(1, 2, 4), repeats=2, holdout_fraction=0.0)
+    records = sweep_calibration(spec)
+    assert len(records) == 3           # fc has no seq axis → one per batch
+    for rec in records:
+        assert rec["kind"] == "calibration"
+        assert rec["phase"] == "prefill" and rec["tokens"] == 1
+        assert rec["result"]["latency_s"] > 0
+        assert rec["result"]["mode"] == "measured-cpu"
+    result = run_calibration_job(spec)
+    prof = CalibrationProfile.from_dict(result.metrics["profile"])
+    assert prof.source == "measured-cpu"
+    assert all(np.isfinite(prof.prefill.coef))
+    assert result.extra_records == records or len(result.extra_records) == 3
+    # grid metadata reflects what was measured, not the spec defaults:
+    # fc has no seq axis, so the prompt grid collapsed to length 1
+    assert prof.grid == {"batches": [1, 2, 4], "seqs": [1], "contexts": []}
+
+
+def test_oracle_sweep_matches_latency_model():
+    spec = CalibrationSpec(job_id="cal-oracle",
+                           model=ModelRef(name="gemma2-2b"),
+                           hardware="tpu-v5e", chips=4,
+                           batches=(1, 4), seqs=(32, 128))
+    records = sweep_calibration(spec)
+    assert len(records) == 8           # 4 prefill + 4 decode points
+    analytic = LatencyModel(get_config("gemma2-2b"), chips=4)
+    for rec in records:
+        fn = (analytic.prefill_latency if rec["phase"] == "prefill"
+              else analytic.decode_latency)
+        assert rec["result"]["latency_s"] == \
+            pytest.approx(fn(rec["batch"], rec["tokens"]))
+
+
+# ---- planner (acceptance: verified SLO at minimum modeled cost) ------------
+def _plan_workload():
+    return WorkloadSpec(kind="poisson", rate=600, duration_s=2,
+                        prompt_tokens=128, output_tokens=4,
+                        output_tokens_max=16, seed=0)
+
+
+def test_planner_best_is_slo_verified_and_cheapest():
+    prof = LatencyModel(get_config("gemma2-2b"), chips=4).to_profile()
+    plan = plan_capacity(prof, _plan_workload(), slo_latency_s=0.25,
+                         slo_target=0.99, replicas=(1, 2),
+                         policies=("tfs", "continuous"))
+    best = plan.best
+    assert best is not None
+    # the load is sized so one replica misses the SLO — the planner must
+    # actually discriminate
+    assert any(not c.meets_slo for c in plan.candidates)
+    # minimum modeled cost among every feasible candidate
+    feasible = [c for c in plan.candidates if c.meets_slo]
+    assert best.objective == min(c.objective for c in feasible)
+    # independent re-verification: simulate_cluster at the chosen config
+    res = simulate_cluster(
+        _plan_workload(),
+        resolve_policy(SoftwareSpec(policy=best.policy, max_batch=16,
+                                    max_prefill=8)),
+        prof.to_latency_model(),
+        cluster=ClusterSpec(replicas=best.replicas, router=best.router))
+    assert res.slo_attainment(0.25) >= 0.99
+    assert plan_table(plan)            # renders, feasible-first
+    assert plan.candidates[0].meets_slo
+
+
+def test_planner_rejects_unknown_objective():
+    prof = fit_known()
+    with pytest.raises(ValueError, match="objective"):
+        plan_capacity(prof, _plan_workload(), slo_latency_s=0.25,
+                      replicas=(1,), policies=("tfs",),
+                      objective="cost_per_1k_requests")  # typo'd key
+
+
+# ---- session integration ---------------------------------------------------
+def test_session_runs_calibration_and_plan_specs(tmp_path):
+    db = PerfDB(str(tmp_path / "perf.jsonl"))
+    session = BenchmarkSession(n_workers=2, db=db)
+    cal = session.submit(CalibrationSpec(
+        job_id="cal", model=ModelRef(name="gemma2-2b"), hardware="tpu-v5e",
+        chips=4, batches=(1, 2, 4, 8), seqs=(32, 64, 128),
+        profile_dir=str(tmp_path)))
+    session.run()
+    cal_result = cal.result()
+    assert cal_result.metrics["profile_path"] is not None
+
+    # dict submission with kind dispatch, consuming the saved profile
+    plan = session.submit({
+        "kind": "plan", "job_id": "plan",
+        "profile": "gemma2-2b@tpu-v5e", "profile_dir": str(tmp_path),
+        "workload": {"kind": "poisson", "rate": 600, "duration_s": 2,
+                     "prompt_tokens": 128, "output_tokens": 4,
+                     "output_tokens_max": 16, "seed": 0},
+        "slo_latency_s": 0.25, "slo_target": 0.99,
+        "replicas": [1, 2], "policies": ["tfs", "continuous"]})
+    session.run()
+    best = plan.result().metrics["best"]
+    assert best is not None and best["replicas"] >= 1
+
+    # per-grid-point records landed in PerfDB under the calibration kind,
+    # alongside the two job records
+    grid = db.query(kind="calibration", phase="prefill")
+    assert len(grid) == 12
+    assert db.query(kind="calibration", job_id="cal",
+                    **{"result.mode": "oracle"})
+    assert len(db.query(job_id="cal")) == 1 + 12 + 12  # job + decode + prefill
+
+    # write-through: a fresh PerfDB sees every line intact
+    reloaded = PerfDB(str(tmp_path / "perf.jsonl"))
+    assert len(reloaded) == len(db)
+
+    # typed record round-trip for both new kinds
+    for rec in (cal_result.to_record(), plan.result().to_record()):
+        back = JobResult.from_record(json.loads(json.dumps(rec)))
+        assert back.spec == (cal_result.spec if rec["kind"] == "calibration"
+                             else plan.result().spec)
+        assert back.metrics.keys() == rec["result"].keys()
+
+
+def test_benchmark_job_clocked_by_profile(tmp_path):
+    prof = LatencyModel(get_config("gemma2-2b"), chips=4).to_profile()
+    path = prof.save(tmp_path)
+    spec = BenchmarkJobSpec(
+        job_id="prof-job", model=ModelRef(name="gemma2-2b"),
+        profile=str(path), slo_latency_s=0.25,
+        software={"policy": "continuous", "max_batch": 16},
+        workload=WorkloadSpec(rate=100, duration_s=1, output_tokens=4,
+                              seed=0))
+    result = run_stages(spec)
+    assert result.metrics["throughput_rps"] > 0
+    assert result.mode == "fitted-profile"     # provenance, not roofline
+    assert result.cold_start_s == pytest.approx(prof.cold_start_s)
+    # spec round-trips with the new field
+    assert BenchmarkJobSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_spec_kind_dispatch_roundtrips():
+    cal = CalibrationSpec(job_id="c", model=ModelRef(name="gemma2-2b"))
+    plan = PlanSpec(job_id="p", profile="x@y")
+    for spec in (cal, plan):
+        d = json.loads(json.dumps(spec.to_dict()))
+        assert spec_from_dict(d) == spec
+    assert spec_from_dict({"job_id": "b"}) == BenchmarkJobSpec(job_id="b")
+    with pytest.raises(ValueError):
+        spec_from_dict({"kind": "nope", "job_id": "x"})
+
+
+# ---- PerfDB satellites -----------------------------------------------------
+def test_perfdb_get_path_and_dotted_query():
+    db = PerfDB()
+    db.append({"a": {"b": {"c": 1}}, "flat": 2})
+    db.append({"a": {"b": {"c": 2}}, "flat": 2})
+    assert PerfDB.get_path(db.all()[0], "a.b.c") == 1
+    assert PerfDB.get_path(db.all()[0], "a.missing.c") is None
+    assert PerfDB.get_path(db.all()[0], "flat.too.deep") is None
+    assert len(db.query(**{"a.b.c": 2})) == 1
+    assert len(db.query(flat=2)) == 2
+
+
+def test_perfdb_append_write_through_and_concurrent(tmp_path):
+    path = tmp_path / "db.jsonl"
+    db = PerfDB(str(path))
+    db.append({"i": -1})
+    # write-through: visible on disk immediately, before any close/exit
+    assert len(path.read_text().splitlines()) == 1
+
+    def writer(k):
+        for i in range(50):
+            db.append({"writer": k, "i": i, "pad": "x" * 256})
+
+    threads = [threading.Thread(target=writer, args=(k,)) for k in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    lines = path.read_text().splitlines()
+    assert len(lines) == 1 + 8 * 50
+    # no interleaved partial lines: every line parses back
+    recs = [json.loads(line) for line in lines]
+    assert sum(1 for r in recs if r.get("writer") == 3) == 50
+
+
+def test_heatmap_empty_and_calibration_pivot():
+    db = PerfDB()
+    hm = heatmap(db, row_key="batch", col_key="tokens",
+                 value_key="result.latency_s", kind="calibration")
+    assert hm == {"rows": [], "cols": [], "matrix": [], "row_key": "batch",
+                  "col_key": "tokens", "value_key": "result.latency_s"}
+    spec = CalibrationSpec(job_id="hm", model=ModelRef(name="gemma2-2b"),
+                           chips=4, batches=(1, 2), seqs=(32, 64))
+    sweep_calibration(spec, db=db)
+    hm = heatmap(db, row_key="batch", col_key="tokens",
+                 value_key="result.latency_s", kind="calibration",
+                 phase="prefill")
+    assert hm["rows"] == [1, 2] and hm["cols"] == [32, 64]
+    assert np.isfinite(np.asarray(hm["matrix"])).all()
+    # filters that match nothing stay empty, not crashing
+    assert heatmap(db, row_key="batch", col_key="tokens",
+                   value_key="result.latency_s",
+                   kind="no-such-kind")["matrix"] == []
