@@ -1,6 +1,6 @@
 """Calibration + capacity planning: the measure → model → plan loop.
 
-Three sections:
+Four sections:
   (a) measured fc-family calibration — real CPU execution over a batch
       grid, least-squares fit, held-out grid points must be predicted
       within 15% mean relative error;
@@ -9,10 +9,15 @@ Three sections:
       diagnostics;
   (c) SLO-aware capacity plan driven by the fitted profile — a
       2-replica grid searched for the cheapest configuration meeting a
-      p(e2e ≤ SLO) ≥ target, re-verified with ``simulate_cluster``.
+      p(e2e ≤ SLO) ≥ target, re-verified with ``simulate_cluster``;
+  (d) memory-aware planning — the same profile planned under a KV-cache
+      budget: a latency-feasible decode-slot count must be *rejected*
+      for exceeding HBM, with the reason reported.
 
 ``--smoke`` keeps grids/durations CI-sized (it is already small; smoke
-mainly trims the plan grid).
+mainly trims the plan grid); ``--json PATH`` writes the metrics dict to
+PATH and ``--perfdb PATH`` persists the session's PerfDB JSONL (both
+consumed by the perf-regression CI lane).
 """
 from __future__ import annotations
 
@@ -23,12 +28,15 @@ from pathlib import Path
 # repo root is not)
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
+from repro.analysis.memory_model import kv_bytes_per_token
 from repro.calibrate import plan_capacity
-from repro.core import BenchmarkSession, CalibrationSpec, ModelRef, PlanSpec
+from repro.configs import get_config
+from repro.core import (BenchmarkSession, CalibrationSpec, MemorySpec,
+                        ModelRef, PerfDB, PlanSpec)
 from repro.core.analysis import fit_report, plan_table
 from repro.serving.workload import WorkloadSpec
 
-from benchmarks.common import emit, save_json, timed
+from benchmarks.common import dump_json, emit, save_json, timed
 
 HOLDOUT_TARGET = 0.15        # mean relative error on held-out grid points
 SLO_S = 0.25
@@ -123,17 +131,62 @@ def capacity_plan(session, smoke, profile_path, out):
          f"slo_attainment={att:.2f};target={SLO_TARGET:.0%}")
 
 
-def run(smoke: bool = False) -> None:
+def memory_aware_plan(session, smoke, profile_path, out):
+    """Acceptance: the planner must reject a latency-feasible slot count
+    whose KV working set exceeds the HBM budget, and say why."""
+    wl = WorkloadSpec(kind="poisson", rate=400, duration_s=2,
+                      prompt_tokens=128, output_tokens=4,
+                      output_tokens_max=16, seed=0)
+    # profiles carry no model config, so ground the memory model
+    # explicitly from the arch the profile was fitted on
+    kv_b = kv_bytes_per_token(get_config("gemma2-2b"))
+    memory = MemorySpec(hbm_gb=0.2, kv_bytes_per_token=kv_b)
+    common = dict(slo_latency_s=SLO_S, slo_target=SLO_TARGET,
+                  replicas=(2,), policies=("continuous",),
+                  routers=("least-loaded",), max_batches=(8, 256))
+    free = plan_capacity(str(profile_path), wl, **common)
+    bound = plan_capacity(str(profile_path), wl, memory=memory, **common)
+    print(plan_table(bound))
+
+    big_free = next(c for c in free.candidates if c.max_batch == 256)
+    big_bound = next(c for c in bound.candidates if c.max_batch == 256)
+    small_bound = next(c for c in bound.candidates if c.max_batch == 8)
+    assert big_free.meets_slo, \
+        "256-slot config should be latency-feasible without a memory model"
+    assert big_bound.infeasible_reason is not None, \
+        "memory-aware plan failed to reject the over-committed config"
+    assert small_bound.infeasible_reason is None
+    out["plan_memory"] = {
+        "rejected": sum(c.infeasible_reason is not None
+                        for c in bound.candidates),
+        "rejected_reason": big_bound.infeasible_reason,
+        "latency_feasible_without_memory": big_free.meets_slo,
+        "best_max_batch": bound.best.max_batch if bound.best else None,
+    }
+    emit("calibrate.finding.plan_rejects_oom_config", 0.0,
+         f"max_batch=256 latency-feasible but rejected: "
+         f"{big_bound.infeasible_reason}")
+
+
+def run(smoke: bool = False, json_path: str | None = None,
+        perfdb_path: str | None = None) -> None:
     out = {}
-    session = BenchmarkSession(n_workers=2)
+    db = None
+    if perfdb_path:
+        Path(perfdb_path).parent.mkdir(parents=True, exist_ok=True)
+        db = PerfDB(perfdb_path)
+    session = BenchmarkSession(n_workers=2, db=db)
     profile_dir = Path(__file__).resolve().parent.parent / "experiments" \
         / "bench" / "profiles"
     measured_fc_calibration(session, smoke, out)
     profile_path = oracle_gemma_calibration(session, smoke, profile_dir, out)
     capacity_plan(session, smoke, profile_path, out)
+    memory_aware_plan(session, smoke, profile_path, out)
     out["calibration_records_in_perfdb"] = len(
         session.db.query(kind="calibration"))
     save_json("calibrate", out)
+    if json_path:
+        dump_json(json_path, out)
 
 
 if __name__ == "__main__":
@@ -141,5 +194,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small grids/durations for CI")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the metrics dict to PATH "
+                         "(perf-regression lane input)")
+    ap.add_argument("--perfdb", metavar="PATH", default=None,
+                    help="persist the session PerfDB JSONL here "
+                         "(uploaded as a CI artifact)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, json_path=args.json, perfdb_path=args.perfdb)

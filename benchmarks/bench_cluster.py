@@ -1,16 +1,21 @@
 """Cluster-scale serving: throughput & p99-SLO attainment across
 replicas × batching policy × router.
 
-Four sections:
+Five sections:
   (a) ramp knee-finding — window vs preferred vs continuous batching on a
       stepped-rate generation workload (continuous should win throughput
       at equal-or-better p99);
   (b) replicas × router sweep at a fixed overload rate — SLO attainment;
   (c) saturation scaling — highest sustained rate for 1 replica vs a
       4-replica least-loaded cluster (target: ≥ 3× scaling);
-  (d) reactive autoscaler under a bursty workload.
+  (d) reactive autoscaler under a bursty workload;
+  (e) memory pressure — paged KV-cache accounting: prefix caching must
+      sustain ≥ 1.3× throughput on a shared-prefix chat workload at equal
+      HBM budget, and a halved budget must preempt/recompute rather than
+      over-allocate while every request still completes.
 
-``--smoke`` shrinks durations/grids for CI.
+``--smoke`` shrinks durations/grids for CI; ``--json PATH`` additionally
+writes the metrics dict to PATH (the perf-regression lane's input).
 """
 from __future__ import annotations
 
@@ -26,10 +31,11 @@ from repro.core.analysis import saturation_knee
 from repro.serving.batching import make_policy
 from repro.serving.cluster import ClusterSpec, simulate_cluster
 from repro.serving.latency_model import LatencyModel
+from repro.serving.memory import MemorySpec
 from repro.serving.simulator import simulate
-from repro.serving.workload import WorkloadSpec, ramp_step_rates
+from repro.serving.workload import WorkloadSpec, generate, ramp_step_rates
 
-from benchmarks.common import emit, save_json, timed
+from benchmarks.common import dump_json, emit, save_json, timed
 
 MODEL = "gemma2-2b"
 CHIPS = 4
@@ -142,19 +148,85 @@ def autoscale_demo(lm, smoke, out):
              f"slo={s['slo_attainment']:.2f}")
 
 
-def run(smoke: bool = False) -> None:
+def memory_pressure(lm, smoke, out):
+    """Paged KV-cache accounting: prefix caching + preemption."""
+    # (e1) shared-prefix chat at a rate that saturates the cache-less
+    # config: prefix caching skips most prefill compute, so the same
+    # replica sustains the offered rate where the cold config backs up
+    wl = _gen_workload(rate=600, duration_s=2 if smoke else 4,
+                       prompt_tokens=512, prefix_tokens=480,
+                       output_tokens=2, output_tokens_max=4,
+                       session_count=8, seed=4)
+    stats = {}
+    for pc in (True, False):
+        label = "prefix_on" if pc else "prefix_off"
+        res, us = timed(
+            simulate_cluster, wl, make_policy("continuous", max_batch=16),
+            lm, cluster=ClusterSpec(memory=MemorySpec(prefix_caching=pc)))
+        s = dict(res.summary(), slo_attainment=res.slo_attainment(SLO_S))
+        stats[pc] = s
+        out[f"memory/{label}"] = s
+        emit(f"cluster.memory.{label}", us,
+             f"thr={s['throughput_rps']:.0f}rps;"
+             f"p99={s['p99_s']*1e3:.0f}ms;"
+             f"hit_rate={s['prefix_hit_rate']:.2f};"
+             f"peak_occ={s['kv_peak_occupancy']:.2f}")
+    ratio = stats[True]["throughput_rps"] \
+        / max(stats[False]["throughput_rps"], 1e-9)
+    out["memory/prefix_ratio"] = {"throughput_ratio": ratio}
+    emit("cluster.finding.prefix_cache_speedup", 0.0,
+         f"thr_ratio={ratio:.2f}x;target>=1.3x")
+    assert ratio >= 1.3, \
+        f"prefix caching gained only {ratio:.2f}x throughput (< 1.3x)"
+
+    # (e2) long decodes against a full vs halved KV budget: the halved
+    # budget must preempt (evict + recompute) instead of over-allocating,
+    # and every admitted request must still complete
+    wl = _gen_workload(rate=60, duration_s=2 if smoke else 4,
+                       prompt_tokens=96, output_tokens=128,
+                       output_tokens_max=256, session_count=4, seed=5)
+    expected = len(generate(wl))
+    for gb, label in ((0.6, "full"), (0.3, "halved")):
+        res, us = timed(
+            simulate_cluster, wl, make_policy("continuous", max_batch=16),
+            lm, cluster=ClusterSpec(
+                memory=MemorySpec(hbm_gb=gb, prefix_caching=False)))
+        m = res.memory
+        s = dict(res.summary(), completed=len(res.traces),
+                 peak_blocks=m["peak_blocks"],
+                 total_blocks=m["total_blocks_per_replica"])
+        out[f"memory/budget_{label}"] = s
+        emit(f"cluster.memory.budget_{label}", us,
+             f"blocks={m['peak_blocks']}/{m['total_blocks_per_replica']};"
+             f"preempt={s['preemptions']};done={len(res.traces)}")
+        assert len(res.traces) == expected, \
+            f"{label}: {len(res.traces)} of {expected} completed"
+        assert m["peak_blocks"] <= m["total_blocks_per_replica"], \
+            f"{label}: over-allocated {m['peak_blocks']} blocks"
+        if label == "halved":
+            assert s["preemptions"] > 0, \
+                "halved budget never preempted — memory pressure unmodeled"
+    emit("cluster.finding.preempt_not_overallocate", 0.0,
+         f"halved_preemptions={out['memory/budget_halved']['preemptions']};"
+         f"all_{expected}_completed=True")
+
+
+def run(smoke: bool = False, json_path: str | None = None) -> None:
     lm = LatencyModel(get_config(MODEL), chips=CHIPS)
     out = {}
     ramp_comparison(lm, smoke, out)
     replica_router_sweep(lm, smoke, out)
     saturation_scaling(lm, smoke, out)
     autoscale_demo(lm, smoke, out)
+    memory_pressure(lm, smoke, out)
     # knee of the ramp per policy (for the writeup)
     wl = _gen_workload(kind="ramp", duration_s=2 if smoke else 6,
                        ramp_min_rate=50, ramp_max_rate=500,
                        ramp_steps=3 if smoke else 6, seed=0)
     out["ramp_step_rates"] = ramp_step_rates(wl)
     save_json("cluster_scale", out)
+    if json_path:
+        dump_json(json_path, out)
 
 
 if __name__ == "__main__":
@@ -162,5 +234,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small grids/durations for CI")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the metrics dict to PATH "
+                         "(perf-regression lane input)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, json_path=args.json)

@@ -1,0 +1,135 @@
+"""Perf-regression gate for the ``bench-regression`` CI lane.
+
+Compares the JSON metric dumps produced by ``bench_cluster.py --json`` /
+``bench_calibrate.py --json`` against a committed baseline
+(``benchmarks/baselines/ci_baseline.json``), prints a delta table, and
+exits non-zero when any metric regressed beyond its tolerance.
+
+Baseline schema::
+
+    {
+      "default_tolerance": 0.15,
+      "metrics": {
+        "<namespace>:<dotted.path>": {
+          "value": 123.4,            # the committed reference number
+          "direction": "higher",     # "higher" | "lower" is better
+          "tolerance": 0.15          # optional per-metric override
+        }, ...
+      }
+    }
+
+``<namespace>`` names one of the input files (``cluster=out/a.json``);
+``<dotted.path>`` walks into its JSON.  Simulated metrics (throughput,
+p99, prefix hit rate) are deterministic given the seeds, so they carry
+the tight default tolerance; wall-clocked ones (the calibration holdout
+error) get a wide per-metric override.
+
+Usage::
+
+    python benchmarks/check_regression.py \\
+        --baseline benchmarks/baselines/ci_baseline.json \\
+        cluster=out/bench_cluster.json calibrate=out/bench_calibrate.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+DEFAULT_TOLERANCE = 0.15
+
+Row = Tuple[str, float, Optional[float], Optional[float], str]
+
+
+def get_path(node: Any, path: str) -> Optional[Any]:
+    """Walk a dotted path into nested dicts (None on any miss)."""
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def compare(baseline: Dict[str, Any], inputs: Dict[str, Dict[str, Any]],
+            default_tolerance: Optional[float] = None
+            ) -> Tuple[List[Row], List[str]]:
+    """Evaluate every baseline metric against the inputs.
+
+    Returns (table rows, failed metric names).  A metric fails when it
+    moved in the *bad* direction by more than its tolerance, or when it
+    is missing from the inputs (a silently dropped metric must not turn
+    the lane green).
+    """
+    tol0 = default_tolerance if default_tolerance is not None \
+        else float(baseline.get("default_tolerance", DEFAULT_TOLERANCE))
+    rows: List[Row] = []
+    failures: List[str] = []
+    for name, entry in baseline["metrics"].items():
+        ns, _, path = name.partition(":")
+        base = float(entry["value"])
+        direction = entry.get("direction", "higher")
+        if direction not in ("higher", "lower"):
+            raise ValueError(f"{name}: bad direction {direction!r}")
+        tol = float(entry.get("tolerance", tol0))
+        cur = get_path(inputs.get(ns), path)
+        if cur is None:
+            rows.append((name, base, None, None, "MISSING"))
+            failures.append(name)
+            continue
+        cur = float(cur)
+        if base != 0:
+            delta = (cur - base) / abs(base)
+        else:
+            delta = 0.0 if cur == 0 else float("inf") * (1 if cur > 0
+                                                         else -1)
+        worse = -delta if direction == "higher" else delta
+        status = "FAIL" if worse > tol else "ok"
+        if status == "FAIL":
+            failures.append(name)
+        rows.append((name, base, cur, delta, status))
+    return rows, failures
+
+
+def render(rows: List[Row]) -> str:
+    w = max((len(r[0]) for r in rows), default=20) + 2
+    lines = [f"{'metric':<{w}}{'baseline':>12}{'current':>12}"
+             f"{'delta':>9}  status"]
+    for name, base, cur, delta, status in rows:
+        cur_s = f"{cur:>12.5g}" if cur is not None else f"{'-':>12}"
+        delta_s = f"{delta:>+8.1%}" if delta is not None else f"{'-':>8}"
+        lines.append(f"{name:<{w}}{base:>12.5g}{cur_s}{delta_s}  {status}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON")
+    ap.add_argument("--default-tolerance", type=float, default=None,
+                    help="override the baseline's default tolerance")
+    ap.add_argument("inputs", nargs="+", metavar="NAME=PATH",
+                    help="bench JSON dumps, namespaced by NAME")
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    inputs: Dict[str, Dict[str, Any]] = {}
+    for item in args.inputs:
+        name, _, path = item.partition("=")
+        if not path:
+            ap.error(f"input {item!r} is not NAME=PATH")
+        inputs[name] = json.loads(Path(path).read_text())
+
+    rows, failures = compare(baseline, inputs, args.default_tolerance)
+    print(render(rows))
+    if failures:
+        print(f"\nREGRESSION: {len(failures)} metric(s) beyond tolerance: "
+              + ", ".join(failures), file=sys.stderr)
+        return 1
+    print(f"\nall {len(rows)} metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,14 @@ def save_json(name: str, payload: Any) -> None:
                                                      default=str))
 
 
+def dump_json(path: str, payload: Any) -> None:
+    """Write a metrics dict to an explicit path (the --json flag the
+    perf-regression CI lane consumes)."""
+    out = Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(payload, indent=2, default=str))
+
+
 def timed(fn: Callable, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)

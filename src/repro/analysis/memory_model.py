@@ -21,6 +21,7 @@ from __future__ import annotations
 
 from typing import Dict
 
+from repro import hw as hw_lib
 from repro.configs.shapes import DECODE, PREFILL, TRAIN, ShapeSpec
 from repro.models.config import ModelConfig
 
@@ -51,3 +52,28 @@ def estimate_bytes(kind: str, cfg: ModelConfig, shape: ShapeSpec,
     if kind == DECODE:
         return P + C + 8.0 * b_dev * cfg.d_model * act_bytes * max(L, 1)
     raise ValueError(kind)
+
+
+# ---- serving KV-cache capacity (the memory subsystem's budget source) ------
+def kv_bytes_per_token(cfg: ModelConfig,
+                       bytes_per_elem: float = 2.0) -> float:
+    """KV-cache bytes one cached token costs across all attention layers.
+
+    Attention-free blocks (RG-LRU, RWKV6) keep constant-size state, so
+    only ``attn_*`` layers contribute; K and V are each
+    ``num_kv_heads × head_dim`` elements per layer.
+    """
+    n_attn = sum(k.startswith("attn") for k in cfg.layer_kinds())
+    return n_attn * 2.0 * cfg.num_kv_heads * cfg.head_dim * bytes_per_elem
+
+
+def serving_hbm_headroom(hw: hw_lib.HardwareModel, chips: int,
+                         weight_bytes: float,
+                         util_fraction: float = 0.9) -> float:
+    """HBM bytes left for KV cache on one replica after resident weights.
+
+    ``util_fraction`` reserves slack for activations, collectives and
+    allocator fragmentation, mirroring vLLM's ``gpu_memory_utilization``.
+    """
+    usable = hw.hbm_bytes * max(chips, 1) * util_fraction
+    return max(usable - weight_bytes, 0.0)

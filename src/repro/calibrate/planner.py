@@ -19,18 +19,27 @@ from repro.core.results import JobResult
 from repro.core.spec import PlanSpec
 from repro.serving.cluster import ClusterSpec, simulate_cluster
 from repro.serving.latency_model import NETWORKS
+from repro.serving.memory import (GiB, KVBudgetError, MemorySpec,
+                                  resolve_memory)
 from repro.serving.workload import WorkloadSpec
 
 
 @dataclasses.dataclass(frozen=True)
 class PlanCandidate:
-    """One simulated configuration of the planning grid."""
+    """One configuration of the planning grid.
+
+    ``infeasible_reason`` is set when the memory check rejected the
+    candidate before simulation (its KV working set cannot fit the
+    per-replica HBM budget, however good its latency would be).
+    """
     replicas: int
     policy: str
     router: str
     metrics: Dict[str, float]       # SimResult.summary() + slo_attainment
     meets_slo: bool
     objective: float                # the minimized metric's value
+    max_batch: int = 0              # 0 in legacy single-max_batch plans
+    infeasible_reason: Optional[str] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -69,19 +78,60 @@ def _policy(name: str, max_batch: int, max_prefill: int):
                                        max_prefill=max_prefill))
 
 
+def _memory_working_set_reason(memory: MemorySpec, oracle,
+                               workload: WorkloadSpec,
+                               max_batch: int) -> Optional[str]:
+    """Static admission check: can ``max_batch`` concurrent sequences at
+    their full context length ever fit the per-replica KV budget?  The
+    estimate is conservative (every slot at max length) — that is the
+    regime a capacity plan must survive."""
+    resolved = resolve_memory(memory, oracle)
+    out_max = workload.output_tokens_max
+    if out_max is None:
+        # unbounded generation: the engine clamps each sequence at
+        # max_model_len, so that is the per-slot working set
+        tokens = max(resolved.max_model_len, workload.prompt_tokens + 1)
+    else:
+        tokens = workload.prompt_tokens + max(workload.output_tokens,
+                                              out_max, 1)
+        tokens = min(tokens, max(resolved.max_model_len,
+                                 workload.prompt_tokens + 1))
+    bt = memory.block_tokens
+    blocks = -(-tokens // bt) * max_batch
+    if blocks <= resolved.total_blocks:
+        return None
+    ws_gib = blocks * bt * resolved.kv_bytes_per_token / GiB
+    return (f"KV working set {ws_gib:.2f} GiB "
+            f"(max_batch={max_batch} × {tokens} tok × "
+            f"{resolved.kv_bytes_per_token:.0f} B/tok) exceeds the "
+            f"per-replica KV budget of "
+            f"{resolved.budget_bytes / GiB:.2f} GiB "
+            f"({resolved.total_blocks} × {bt}-token blocks)")
+
+
 def plan_capacity(profile, workload: WorkloadSpec, *,
                   slo_latency_s: float, slo_target: float = 0.99,
                   replicas: Sequence[int] = (1, 2, 4),
                   policies: Sequence[str] = ("tfs", "continuous"),
                   routers: Sequence[str] = ("least-loaded",),
-                  max_batch: int = 16, max_prefill: int = 8,
+                  max_batch: int = 16,
+                  max_batches: Sequence[int] = (),
+                  max_prefill: int = 8,
                   network: str = "lan",
-                  objective: str = "cost_per_1k_req") -> PlanResult:
+                  objective: str = "cost_per_1k_req",
+                  memory: Optional[MemorySpec] = None) -> PlanResult:
     """Search the configuration grid for the cheapest SLO-meeting setup.
 
     ``profile`` may be a :class:`CalibrationProfile`, its dict/JSON-path/
     ``model@hardware`` form, or any ready ``LatencyOracle`` (so a plan
     can also be run against the analytic roofline model directly).
+
+    With ``memory`` set the plan is memory-*and*-latency-aware: every
+    candidate whose KV working set cannot fit the per-replica HBM budget
+    is rejected up front (``infeasible_reason`` says why), and surviving
+    candidates are simulated under that budget, so preemption/thrashing
+    shows up in their latency numbers.  ``max_batches`` widens the grid
+    over decode-slot counts (default: just ``max_batch``).
     """
     if isinstance(profile, CalibrationProfile):
         oracle, key = profile.to_latency_model(), profile.key
@@ -91,13 +141,38 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
         key = oracle.name
     else:
         oracle, key = profile, getattr(profile, "name", "oracle")
+    if isinstance(memory, dict):
+        memory = MemorySpec.from_dict(memory)
+    mbs = tuple(max_batches) or (max_batch,)
 
     candidates: List[PlanCandidate] = []
-    for n, pol, router in itertools.product(replicas, policies, routers):
-        res = simulate_cluster(
-            workload, _policy(pol, max_batch, max_prefill), oracle,
-            cluster=ClusterSpec(replicas=int(n), router=router),
-            network=NETWORKS[network])
+    for n, pol, router, mb in itertools.product(replicas, policies,
+                                                routers, mbs):
+        reason = None
+        if memory is not None:
+            reason = _memory_working_set_reason(memory, oracle, workload,
+                                                int(mb))
+        if reason is not None:
+            candidates.append(PlanCandidate(
+                replicas=int(n), policy=pol, router=router, metrics={},
+                meets_slo=False, objective=float("inf"),
+                max_batch=int(mb), infeasible_reason=reason))
+            continue
+        try:
+            res = simulate_cluster(
+                workload, _policy(pol, int(mb), max_prefill), oracle,
+                cluster=ClusterSpec(replicas=int(n), router=router,
+                                    memory=memory),
+                network=NETWORKS[network])
+        except KVBudgetError as exc:
+            # budget validation caught something the static estimate
+            # missed (e.g. per-request lengths from a replayed trace):
+            # reject the candidate instead of failing the whole grid
+            candidates.append(PlanCandidate(
+                replicas=int(n), policy=pol, router=router, metrics={},
+                meets_slo=False, objective=float("inf"),
+                max_batch=int(mb), infeasible_reason=str(exc)))
+            continue
         metrics = dict(res.summary(),
                        slo_attainment=res.slo_attainment(slo_latency_s))
         if objective not in metrics:
@@ -107,7 +182,7 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
         candidates.append(PlanCandidate(
             replicas=int(n), policy=pol, router=router, metrics=metrics,
             meets_slo=metrics["slo_attainment"] >= slo_target,
-            objective=float(metrics[objective])))
+            objective=float(metrics[objective]), max_batch=int(mb)))
     candidates.sort(key=lambda c: (not c.meets_slo, c.objective))
     return PlanResult(profile_key=key, slo_latency_s=slo_latency_s,
                       slo_target=slo_target, objective=objective,
@@ -120,8 +195,10 @@ def plan_from_spec(spec: PlanSpec) -> PlanResult:
         profile, spec.workload, slo_latency_s=spec.slo_latency_s,
         slo_target=spec.slo_target, replicas=spec.replicas,
         policies=spec.policies, routers=spec.routers,
-        max_batch=spec.max_batch, max_prefill=spec.max_prefill,
-        network=spec.network, objective=spec.objective)
+        max_batch=spec.max_batch, max_batches=spec.max_batches,
+        max_prefill=spec.max_prefill,
+        network=spec.network, objective=spec.objective,
+        memory=spec.memory)
 
 
 def run_plan_job(spec: PlanSpec) -> JobResult:
@@ -137,6 +214,8 @@ def run_plan_job(spec: PlanSpec) -> JobResult:
         "objective": spec.objective,
         "candidates": len(plan.candidates),
         "feasible": sum(c.meets_slo for c in plan.candidates),
+        "rejected_memory": sum(c.infeasible_reason is not None
+                               for c in plan.candidates),
         "best": best.to_dict() if best else None,
         "plan": plan.to_dict(),
     }

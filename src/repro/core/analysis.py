@@ -137,23 +137,55 @@ def fit_report(profile) -> str:
 
 
 def plan_table(plan) -> str:
-    """Render a ``PlanResult`` grid: feasible configs first, best starred."""
+    """Render a ``PlanResult`` grid: feasible configs first, best starred;
+    memory-rejected candidates print their rejection reason."""
     best = plan.best
     header = (f"capacity plan vs {plan.profile_key}: "
               f"SLO p(e2e ≤ {plan.slo_latency_s * 1e3:.0f}ms) ≥ "
               f"{plan.slo_target:.0%}, minimize {plan.objective}")
     cols = f"{'':2s}{'replicas':>9}{'policy':>12}{'router':>14}" \
-           f"{'thr rps':>9}{'p99 ms':>8}{'slo':>6}{plan.objective:>16}"
+           f"{'slots':>7}{'thr rps':>9}{'p99 ms':>8}{'slo':>6}" \
+           f"{plan.objective:>16}"
     lines = [header, cols]
     for c in plan.candidates:
         m = c.metrics
+        slots = getattr(c, "max_batch", 0) or "-"
+        prefix = f"{'':2s}{c.replicas:>9}{c.policy:>12}{c.router:>14}" \
+                 f"{slots:>7}"
+        if getattr(c, "infeasible_reason", None):
+            lines.append(f"m {prefix[2:]}  REJECTED: {c.infeasible_reason}")
+            continue
         star = "* " if best is not None and c == best else \
             ("  " if c.meets_slo else "x ")
-        lines.append(f"{star}{c.replicas:>9}{c.policy:>12}{c.router:>14}"
+        lines.append(f"{star}{prefix[2:]}"
                      f"{m['throughput_rps']:>9.1f}{m['p99_s'] * 1e3:>8.1f}"
                      f"{m['slo_attainment']:>6.2f}{c.objective:>16.5f}")
     if best is None:
         lines.append("  (no configuration met the SLO target)")
+    return "\n".join(lines)
+
+
+# ---- KV-cache memory accounting (memory-aware serving) ---------------------
+def memory_table(db: PerfDB, **filters) -> str:
+    """Per-job KV-cache occupancy / prefix-hit / preemption table over
+    benchmark records that ran with memory accounting enabled."""
+    recs = [r for r in db.query(**filters) if r.get("memory")]
+    cols = f"{'job_id':>16}{'arch':>14}{'policy':>12}{'blocks':>8}" \
+           f"{'peak occ':>10}{'mean occ':>10}{'hit rate':>10}" \
+           f"{'preempt':>9}{'evict':>7}"
+    lines = ["KV-cache accounting (per-replica blocks)", cols]
+    for r in recs:
+        m = r["memory"]
+        lines.append(
+            f"{r.get('job_id', '?'):>16}{r.get('arch', '?'):>14}"
+            f"{r.get('policy', '?'):>12}"
+            f"{m.get('total_blocks_per_replica', 0):>8}"
+            f"{m.get('peak_occupancy', 0.0):>10.2%}"
+            f"{m.get('mean_occupancy', 0.0):>10.2%}"
+            f"{m.get('prefix_hit_rate', 0.0):>10.2%}"
+            f"{m.get('preemptions', 0):>9}{m.get('evictions', 0):>7}")
+    if not recs:
+        lines.append("  (no records with memory accounting)")
     return "\n".join(lines)
 
 

@@ -72,6 +72,9 @@ class JobResult:
     cold_start_s: Optional[float] = None
     generated: Optional[Dict[str, Any]] = None
     cluster: Optional[Dict[str, Any]] = None   # replica-tier provenance
+    memory: Optional[Dict[str, Any]] = None    # KV-cache accounting (peak/
+                                               # mean occupancy, prefix hit
+                                               # rate, preemption count)
     schedule: Optional[ScheduleInfo] = None
     benchmark_wall_s: float = 0.0
     ts: Optional[float] = None
@@ -143,6 +146,8 @@ class JobResult:
             rec["cold_start_s"] = self.cold_start_s
         if self.cluster is not None:
             rec["cluster"] = dict(self.cluster)
+        if self.memory is not None:
+            rec["memory"] = dict(self.memory)
         rec["benchmark_wall_s"] = self.benchmark_wall_s
         if self.schedule is not None:
             rec["sched"] = self.schedule.to_dict()
@@ -165,6 +170,8 @@ class JobResult:
                        if rec.get("generated") is not None else None),
             cluster=(dict(rec["cluster"])
                      if rec.get("cluster") is not None else None),
+            memory=(dict(rec["memory"])
+                    if rec.get("memory") is not None else None),
             schedule=(ScheduleInfo.from_dict(rec["sched"])
                       if "sched" in rec else None),
             benchmark_wall_s=rec.get("benchmark_wall_s", 0.0),

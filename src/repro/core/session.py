@@ -131,6 +131,7 @@ def run_stages(spec: AnyJobSpec) -> JobResult:
             "autoscale": spec.cluster.autoscale,
             "per_replica_busy_s": list(res.per_replica_busy_s or []),
         },
+        memory=res.memory,
         benchmark_wall_s=time.time() - t0)
 
 

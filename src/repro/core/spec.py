@@ -15,6 +15,7 @@ from pathlib import Path
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 
 from repro.serving.cluster import ClusterSpec
+from repro.serving.memory import MemorySpec
 from repro.serving.workload import WorkloadSpec
 
 
@@ -234,9 +235,16 @@ class PlanSpec:
     policies: Sequence[str] = ("tfs", "continuous")
     routers: Sequence[str] = ("least-loaded",)
     max_batch: int = 16
+    max_batches: Sequence[int] = ()      # grid over decode slots; () →
+                                         # (max_batch,)
     max_prefill: int = 8
     network: str = "lan"
     objective: str = "cost_per_1k_req"   # minimized among SLO-feasible
+    # KV-cache awareness: when set, candidates whose working set exceeds
+    # the per-replica HBM budget are rejected up front (with the reason),
+    # and feasible candidates are simulated under that budget.  Fitted
+    # profiles carry no model config, so set hbm_gb + kv_bytes_per_token.
+    memory: Optional[MemorySpec] = None
     est_processing_s: float = 1.0        # scheduler hint
 
     kind = "plan"
@@ -245,7 +253,10 @@ class PlanSpec:
         if isinstance(self.workload, dict):
             object.__setattr__(self, "workload",
                                WorkloadSpec(**self.workload))
-        for field in ("replicas", "policies", "routers"):
+        if isinstance(self.memory, dict):
+            object.__setattr__(self, "memory",
+                               MemorySpec.from_dict(self.memory))
+        for field in ("replicas", "policies", "routers", "max_batches"):
             val = getattr(self, field)
             if isinstance(val, list):
                 object.__setattr__(self, field, tuple(val))

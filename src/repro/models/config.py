@@ -30,6 +30,8 @@ class ModelConfig:
     d_ff: int
     vocab_size: int
     head_dim: int = 0                 # 0 → d_model // num_heads
+    max_seq_len: int = 8192           # context limit (prompt + generation);
+                                      # bounds serving KV-cache accounting
 
     # --- MoE ---------------------------------------------------------------
     num_experts: int = 0              # 0 → dense FFN

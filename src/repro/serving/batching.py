@@ -30,6 +30,13 @@ from repro.serving.workload import Request
 class QueuedRequest:
     request: Request
     enqueue_s: float
+    # ---- preemption state (continuous engine + KV cache manager) ----------
+    # a preempted request re-enters the queue carrying its progress: the
+    # tokens it must re-prefill (prompt + generated so far, recomputed at
+    # latency-model cost) and the decode tokens still owed
+    remaining: Optional[int] = None     # None → derive from the request
+    recompute_tokens: int = 0           # context to re-prefill on rejoin
+    preemptions: int = 0
 
 
 class BatchPolicy:

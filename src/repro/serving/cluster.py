@@ -13,10 +13,13 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from repro.serving.batching import BatchPolicy, QueuedRequest
+from repro.serving.batching import (BatchPolicy, ContinuousBatcher,
+                                    QueuedRequest)
 from repro.serving.latency_model import LatencyModel, NetworkModel, NETWORKS
+from repro.serving.memory import (KVBudgetError, KVCacheManager, MemorySpec,
+                                  ResolvedMemory, resolve_memory)
 from repro.serving.simulator import (EPS, PRE_PROCESS_S, ReplicaEngine,
                                      RequestTrace, SimResult)
 from repro.serving.workload import CLOSED, TRACE, Request, WorkloadSpec, \
@@ -35,6 +38,8 @@ class ClusterSpec:
     scale_up_load: float = 4.0      # mean in-flight/replica to add one
     scale_down_load: float = 0.5    # mean in-flight/replica to retire one
     spawn_delay_s: float = 0.5      # cold-start before a new replica serves
+    memory: Optional[MemorySpec] = None   # per-replica KV-cache accounting
+                                    # (None → memory unmodeled, legacy)
 
     def __post_init__(self):
         if self.replicas < 1 or self.min_replicas < 1:
@@ -45,6 +50,9 @@ class ClusterSpec:
         if self.max_replicas < self.min_replicas:
             raise ValueError("ClusterSpec.max_replicas must be >= "
                              "min_replicas")
+        if isinstance(self.memory, dict):
+            object.__setattr__(self, "memory",
+                               MemorySpec.from_dict(self.memory))
 
     @classmethod
     def from_dict(cls, d) -> "ClusterSpec":
@@ -110,10 +118,14 @@ class Autoscaler:
     ``scale_down_load``.  New replicas pay ``spawn_delay_s`` cold start."""
 
     def __init__(self, spec: ClusterSpec, policy: BatchPolicy,
-                 latency: LatencyModel):
+                 latency: LatencyModel, make_engine=None):
         self.spec = spec
         self.policy = policy
         self.latency = latency
+        # factory so spawned replicas get their own KV-cache manager
+        self.make_engine = make_engine or (
+            lambda i, spawn_s: ReplicaEngine(i, policy, latency,
+                                             spawn_s=spawn_s))
 
     def step(self, engines: List[ReplicaEngine], now: float) -> None:
         live = [e for e in engines if not e.retired]
@@ -121,15 +133,43 @@ class Autoscaler:
         queued = sum(len(e.queue) for e in live) / max(n, 1)
         inflight = sum(e.load(now) for e in live) / max(n, 1)
         if queued > self.spec.scale_up_load and n < self.spec.max_replicas:
-            engines.append(ReplicaEngine(
-                len(engines), self.policy, self.latency,
-                spawn_s=now + self.spec.spawn_delay_s))
+            engines.append(self.make_engine(
+                len(engines), now + self.spec.spawn_delay_s))
         elif inflight < self.spec.scale_down_load \
                 and n > self.spec.min_replicas:
             for e in reversed(live):
                 if e.idle(now):
                     e.retired = True
                     break
+
+
+# ---- memory grounding ------------------------------------------------------
+def _resolve_cluster_memory(cluster: ClusterSpec, policy: BatchPolicy,
+                            latency, requests: List[Request]
+                            ) -> Optional[ResolvedMemory]:
+    """Ground the cluster's MemorySpec and validate that the per-replica
+    block budget can hold the largest single request — below that there
+    is no victim to preempt and the sequence could never run."""
+    if cluster.memory is None:
+        return None
+    resolved = resolve_memory(cluster.memory, latency)
+    continuous = isinstance(policy, ContinuousBatcher)
+    worst = 0
+    for r in requests:
+        out = r.output_tokens
+        if continuous:
+            out = max(1, min(out, resolved.max_model_len - r.prompt_tokens))
+        worst = max(worst, r.prompt_tokens + out)
+    bt = cluster.memory.block_tokens
+    need = -(-worst // bt)
+    if need > resolved.total_blocks:
+        raise KVBudgetError(
+            f"KV budget of {resolved.total_blocks} blocks "
+            f"({resolved.budget_bytes / 1024**3:.2f} GiB at "
+            f"{bt} tok/block) cannot hold one {worst}-token sequence "
+            f"({need} blocks); raise hbm_gb/num_blocks or shrink the "
+            "workload's prompt/output lengths")
+    return resolved
 
 
 # ---- cluster event loop ----------------------------------------------------
@@ -163,11 +203,23 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         admit(r)
     next_id = len(requests)
 
-    engines = [ReplicaEngine(i, policy, latency)
-               for i in range(max(cluster.replicas, 1))]
+    resolved = _resolve_cluster_memory(cluster, policy, latency, requests)
+    # decode is bounded by the model's context limit even when memory is
+    # unmodeled — otherwise output_tokens_max=None workloads run their
+    # 32k-token sentinel far past max_seq_len
+    max_len = resolved.max_model_len if resolved is not None \
+        else getattr(getattr(latency, "cfg", None), "max_seq_len", 0)
+
+    def make_engine(i: int, spawn_s: float = 0.0) -> ReplicaEngine:
+        kv = KVCacheManager(cluster.memory, resolved) \
+            if resolved is not None else None
+        return ReplicaEngine(i, policy, latency, spawn_s=spawn_s,
+                             kv=kv, max_model_len=max_len)
+
+    engines = [make_engine(i) for i in range(max(cluster.replicas, 1))]
     router = make_router(cluster.router)
-    scaler = Autoscaler(cluster, policy, latency) if cluster.autoscale \
-        else None
+    scaler = Autoscaler(cluster, policy, latency, make_engine) \
+        if cluster.autoscale else None
     next_scale = cluster.scale_interval_s
     peak = len(engines)
 
@@ -214,6 +266,29 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
     last_done = max((t.done_s for t in done), default=0.0)
     window = 0.0 if workload.kind == TRACE else workload.duration_s
     duration = max(window, last_done)
+    memory = None
+    if resolved is not None:
+        per = [e.kv.stats(duration) for e in engines]
+        hits = sum(p["prefix_hit_tokens"] for p in per)
+        served_tokens = sum(e.kv.hit_tokens + e.kv.miss_tokens
+                            for e in engines)
+        memory = {
+            "block_tokens": cluster.memory.block_tokens,
+            "total_blocks_per_replica": resolved.total_blocks,
+            "budget_bytes_per_replica": resolved.budget_bytes,
+            "kv_bytes_per_token": resolved.kv_bytes_per_token,
+            "max_model_len": resolved.max_model_len,
+            "peak_blocks": max(p["peak_blocks"] for p in per),
+            "peak_occupancy": max(p["peak_occupancy"] for p in per),
+            "mean_occupancy": (sum(p["mean_occupancy"] for p in per)
+                               / len(per)),
+            "prefix_hit_tokens": hits,
+            "prefix_hit_rate": hits / served_tokens if served_tokens
+            else 0.0,
+            "preemptions": sum(p["preemptions"] for p in per),
+            "evictions": sum(p["evictions"] for p in per),
+            "per_replica": per,
+        }
     return SimResult(
         traces=done,
         busy_s=sum(e.busy_s for e in engines),
@@ -222,4 +297,5 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         chips=latency.chips,
         replicas=peak,
         router=cluster.router,
-        per_replica_busy_s=[e.busy_s for e in engines])
+        per_replica_busy_s=[e.busy_s for e in engines],
+        memory=memory)

@@ -79,10 +79,17 @@ class LatencyModel(LatencyOracle):
 
     # ---- analytic per-phase latencies -----------------------------------
     def _kv_bytes_per_token(self) -> float:
-        cfg = self.cfg
-        kinds = cfg.layer_kinds()
-        n_attn = sum(k.startswith("attn") for k in kinds)
-        return n_attn * 2 * cfg.num_kv_heads * cfg.head_dim * 2.0
+        from repro.analysis.memory_model import kv_bytes_per_token
+        return kv_bytes_per_token(self.cfg)
+
+    # ---- memory-subsystem hooks (repro.serving.memory) -------------------
+    def kv_bytes_per_token(self) -> float:
+        """Public alias for the per-token KV footprint (memory accounting)."""
+        return self._kv_bytes_per_token()
+
+    def weight_bytes(self) -> float:
+        """Resident serving weights on one replica (all chips pooled)."""
+        return self.n_params * self.serve_bytes_per_param
 
     def prefill_latency(self, batch: int, prompt: int) -> float:
         cfg = self.cfg

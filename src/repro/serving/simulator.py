@@ -23,6 +23,7 @@ from repro.serving.batching import (BatchPolicy, ContinuousBatcher,
                                     QueuedRequest)
 from repro.serving.latency_model import (LatencyModel, NetworkModel,
                                          NETWORKS)
+from repro.serving.memory import KVCacheManager
 from repro.serving.workload import Request, WorkloadSpec
 
 PRE_PROCESS_S = 0.0015     # resize + tensorize, per request
@@ -45,6 +46,8 @@ class RequestTrace:
     batch_size: int = 1
     replica: int = 0
     done_s: float = 0.0
+    preemptions: int = 0            # KV-pressure evict/recompute cycles
+    cached_prompt_tokens: int = 0   # prompt tokens served from prefix cache
 
     @property
     def e2e(self) -> float:
@@ -63,6 +66,8 @@ class SimResult:
     replicas: int = 1                   # peak live replica count
     router: str = "single"
     per_replica_busy_s: Optional[List[float]] = None
+    memory: Optional[Dict[str, object]] = None   # KV-cache accounting
+                                        # (None when memory is unmodeled)
 
     # ---- aggregate metrics (the paper's metric collector) ----------------
     def latencies(self) -> np.ndarray:
@@ -122,7 +127,7 @@ class SimResult:
         }
 
     def summary(self) -> Dict[str, float]:
-        return {
+        s = {
             "requests": len(self.traces),
             "throughput_rps": self.throughput(),
             "p50_s": self.percentile(50),
@@ -136,6 +141,12 @@ class SimResult:
             "cost_usd": self.cost_usd(),
             "cost_per_1k_req": self.cost_per_1k_requests(),
         }
+        if self.memory is not None:
+            s["prefix_hit_rate"] = self.memory["prefix_hit_rate"]
+            s["preemptions"] = self.memory["preemptions"]
+            s["kv_peak_occupancy"] = self.memory["peak_occupancy"]
+            s["kv_mean_occupancy"] = self.memory["mean_occupancy"]
+        return s
 
 
 @dataclasses.dataclass
@@ -158,12 +169,16 @@ class ReplicaEngine:
     """
 
     def __init__(self, replica_id: int, policy: BatchPolicy,
-                 latency: LatencyModel, spawn_s: float = 0.0):
+                 latency: LatencyModel, spawn_s: float = 0.0,
+                 kv: Optional[KVCacheManager] = None,
+                 max_model_len: int = 0):
         self.replica_id = replica_id
         self.policy = policy
         self.latency = latency
         self.continuous = isinstance(policy, ContinuousBatcher)
         self.spawn_s = spawn_s
+        self.kv = kv                        # None → memory unmodeled
+        self.max_model_len = max_model_len  # 0 → unbounded decode
         self.queue: List[QueuedRequest] = []
         self.server_free_at = spawn_s
         self.busy_s = 0.0
@@ -227,6 +242,20 @@ class ReplicaEngine:
         return self._act_batched(now, traces)
 
     # ---- request-level policies ------------------------------------------
+    def _batch_fitting_memory(self, batch):
+        """Longest batch prefix whose whole-batch KV working set fits the
+        replica budget (request-level policies hold every sequence's full
+        context for the batch's duration)."""
+        kept, blocks = [], 0
+        for q in batch:
+            b = self.kv.blocks_for(q.request.prompt_tokens
+                                   + q.request.output_tokens)
+            if kept and blocks + b > self.kv.total_blocks:
+                break
+            kept.append(q)
+            blocks += b
+        return kept, blocks
+
     def _act_batched(self, now, traces):
         completions: List[Tuple[float, Request]] = []
         while self.queue:
@@ -236,6 +265,9 @@ class ReplicaEngine:
             batch, fire_t = decision
             if fire_t > now + EPS:
                 break
+            kv_blocks = 0
+            if self.kv is not None:
+                batch, kv_blocks = self._batch_fitting_memory(batch)
             ids = {q.request.req_id for q in batch}
             self.queue = [q for q in self.queue
                           if q.request.req_id not in ids]
@@ -248,6 +280,8 @@ class ReplicaEngine:
             self.server_free_at = start + infer_s
             self.busy_s += infer_s
             self.served += bsz
+            if self.kv is not None:
+                self.kv.charge_span(kv_blocks, start, self.server_free_at)
             for q in batch:
                 tr = traces[q.request.req_id]
                 tr.replica = self.replica_id
@@ -262,6 +296,63 @@ class ReplicaEngine:
         return completions
 
     # ---- continuous (token-level) engine ---------------------------------
+    def _clamped_output(self, request: Request) -> int:
+        """Decode tokens owed, bounded by the model's context limit so
+        slot/KV accounting is always finite (``output_tokens_max=None``
+        workloads carry an unbounded-generation sentinel)."""
+        out = request.output_tokens
+        if self.max_model_len:
+            out = min(out, self.max_model_len - request.prompt_tokens)
+        return max(out, 1)
+
+    def _preempt(self, victim: _ActiveRequest, now: float, traces) -> None:
+        """Evict a running request under KV pressure (recompute policy):
+        free its blocks and requeue it carrying its progress — on rejoin
+        it re-prefills prompt + generated-so-far at latency-model cost."""
+        q = victim.qreq
+        self.kv.free(q.request.req_id, now, preempted=True)
+        q.remaining = victim.remaining
+        q.recompute_tokens = victim.context
+        q.preemptions += 1
+        tr = traces[q.request.req_id]
+        tr.preemptions += 1
+        # close this service segment so stage accounting stays truthful:
+        # time served so far is inference, the wait from here to the
+        # rejoin accrues to t_queue (segments accumulate via +=)
+        tr.t_inference += now - victim.join_s
+        q.enqueue_s = now
+        self.queue.insert(0, q)
+
+    def _grow_or_preempt(self, still: List[_ActiveRequest], now: float,
+                         traces) -> List[_ActiveRequest]:
+        """Extend every surviving sequence's KV by its new token; when a
+        block allocation fails, preempt victims (youngest-join or
+        largest-context first) until the extension fits."""
+        survivors: List[_ActiveRequest] = []
+        pending = sorted(still, key=lambda a: (a.join_s,
+                                               a.qreq.request.req_id))
+        while pending:
+            a = pending.pop(0)              # oldest first: highest priority
+            while not self.kv.extend(a.qreq.request.req_id, a.context, now):
+                candidates = pending + survivors
+                if not candidates:
+                    raise RuntimeError(
+                        "KV budget cannot hold a single sequence — "
+                        "simulate_cluster validates against this; was the "
+                        "manager constructed directly with too few blocks?")
+                if self.kv.spec.preemption == "largest":
+                    victim = max(candidates,
+                                 key=lambda v: (v.context,
+                                                v.qreq.request.req_id))
+                else:                       # youngest join first
+                    victim = max(candidates,
+                                 key=lambda v: (v.join_s,
+                                                v.qreq.request.req_id))
+                self._preempt(victim, now, traces)
+                (pending if victim in pending else survivors).remove(victim)
+            survivors.append(a)
+        return survivors
+
     def _act_continuous(self, now, traces):
         completions: List[Tuple[float, Request]] = []
         cap = self.policy.max_batch
@@ -275,36 +366,60 @@ class ReplicaEngine:
                 a.context += 1
                 if a.remaining <= 0:
                     tr = traces[a.qreq.request.req_id]
-                    tr.t_inference = end - a.join_s
+                    tr.t_inference += end - a.join_s
                     tr.t_postprocess = POST_PROCESS_S
                     tr.done_s = end + POST_PROCESS_S
                     completions.append((tr.done_s, a.qreq.request))
                     self.served += 1
+                    if self.kv is not None:
+                        self.kv.free(a.qreq.request.req_id, now)
                 else:
                     still.append(a)
+            if self.kv is not None and still:
+                still = self._grow_or_preempt(still, now, traces)
             if was_full and len(still) < cap:
                 self._slot_free_s = end
             self.active = still
         if self.iter_end is None and (self.queue or self.active):
             start = max(now, self.spawn_s)
             joined: List[_ActiveRequest] = []
+            prefill_lens: List[int] = []
             while (self.queue and len(self.active) + len(joined) < cap
                    and len(joined) < self.policy.max_prefill):
-                q = self.queue.pop(0)
+                q = self.queue[0]
+                # a preempted request re-prefills its full saved context
+                context0 = q.recompute_tokens or q.request.prompt_tokens
+                remaining = q.remaining if q.remaining is not None \
+                    else self._clamped_output(q.request)
+                cached = 0
+                if self.kv is not None:
+                    got = self.kv.allocate(
+                        q.request.req_id, context0, now,
+                        session_id=q.request.session_id,
+                        prefix_tokens=q.request.prefix_tokens)
+                    if got is None:
+                        break           # no KV headroom: stays queued
+                    cached = got
+                self.queue.pop(0)
                 tr = traces[q.request.req_id]
                 tr.replica = self.replica_id
-                tr.t_queue = start - q.enqueue_s
-                tr.t_batch_wait = max(
+                # += so a preempted request's rejoin adds its re-queue
+                # segment instead of overwriting the first one
+                tr.t_queue += start - q.enqueue_s
+                tr.t_batch_wait += max(
                     0.0, start - max(q.enqueue_s, self._slot_free_s))
+                tr.cached_prompt_tokens = max(tr.cached_prompt_tokens,
+                                              cached)
+                # prefix-cache hits skip those tokens' prefill compute
+                prefill_lens.append(max(context0 - cached, 1))
                 joined.append(_ActiveRequest(
-                    qreq=q, remaining=q.request.output_tokens,
-                    context=q.request.prompt_tokens, join_s=start))
+                    qreq=q, remaining=remaining,
+                    context=context0, join_s=start))
             if joined or self.active:
                 n_decode = len(self.active)
                 max_ctx = max((a.context for a in self.active), default=0)
                 n_prefill = len(joined)
-                max_prompt = max((a.qreq.request.prompt_tokens
-                                  for a in joined), default=0)
+                max_prompt = max(prefill_lens, default=0)
                 t_iter = self.latency.iteration_latency(
                     n_prefill, max_prompt, n_decode, max_ctx)
                 self.active.extend(joined)
@@ -320,15 +435,17 @@ class ReplicaEngine:
 
 def simulate(workload: WorkloadSpec, policy: BatchPolicy,
              latency: LatencyModel, *, network: NetworkModel = NETWORKS["lan"],
-             server_side_processing: bool = True) -> SimResult:
+             server_side_processing: bool = True,
+             memory=None) -> SimResult:
     """Run the single-replica pipeline simulation.
 
     This is the one-server special case of
     :func:`repro.serving.cluster.simulate_cluster`; closed-loop workloads
     (``kind="closed"``) reissue each client's next request on completion
-    until ``duration_s``.
+    until ``duration_s``.  ``memory`` (a ``MemorySpec`` or its dict form)
+    enables KV-cache accounting on the single replica.
     """
     from repro.serving.cluster import ClusterSpec, simulate_cluster
     return simulate_cluster(workload, policy, latency,
-                            cluster=ClusterSpec(replicas=1),
+                            cluster=ClusterSpec(replicas=1, memory=memory),
                             network=network)

@@ -24,10 +24,15 @@ TRACE = "trace"
 
 KINDS = (POISSON, UNIFORM, BURST, CLOSED, RAMP, TRACE)
 
+# ``output_tokens_max=None`` ⇒ generate-until-stopped.  Requests carry this
+# sentinel; the continuous engine bounds each decode by the model's
+# ``max_seq_len`` (minus the prompt) so slot/KV accounting stays finite.
+UNBOUNDED_OUTPUT_TOKENS = 1 << 15
+
 # JSONL trace-replay columns; only ``arrival_s`` is required per line, the
 # rest default to the WorkloadSpec values (see configs/traces/README.md).
 TRACE_FIELDS = ("arrival_s", "prompt_tokens", "output_tokens",
-                "payload_bytes", "session_id")
+                "payload_bytes", "session_id", "prefix_tokens")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +43,9 @@ class Request:
     output_tokens: int
     payload_bytes: int
     session_id: int = 0             # client/session for affinity routing
+    prefix_tokens: int = 0          # leading prompt tokens shared by every
+                                    # request of this session (system prompt
+                                    # / chat history — prefix-cache reusable)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,9 +54,16 @@ class WorkloadSpec:
     rate: float = 30.0                  # requests/s (poisson & uniform)
     duration_s: float = 60.0
     prompt_tokens: int = 128
+    prefix_tokens: int = 0              # leading prompt tokens identical
+                                        # within a session (shared-prefix
+                                        # chat; enables prefix-cache reuse)
     output_tokens: int = 1              # classification-style: 1 step
-    output_tokens_max: int = 0          # > output_tokens ⇒ per-request
-                                        # uniform sample in [min, max]
+    output_tokens_max: Optional[int] = 0    # > output_tokens ⇒ per-request
+                                        # uniform sample in [min, max];
+                                        # None ⇒ unbounded generation — the
+                                        # serving engine bounds it by the
+                                        # model's max_seq_len when memory
+                                        # accounting is on
     payload_bytes: int = 150 * 1024     # ~one image
     burst_factor: float = 10.0          # rate multiplier inside a burst
     burst_fraction: float = 0.1         # fraction of time bursting
@@ -84,7 +99,9 @@ def _load_trace(spec: WorkloadSpec) -> List[Request]:
                 prompt_tokens=int(d.get("prompt_tokens", spec.prompt_tokens)),
                 output_tokens=int(d.get("output_tokens", spec.output_tokens)),
                 payload_bytes=int(d.get("payload_bytes", spec.payload_bytes)),
-                session_id=int(d.get("session_id", 0)))
+                session_id=int(d.get("session_id", 0)),
+                prefix_tokens=int(d.get("prefix_tokens",
+                                        spec.prefix_tokens)))
         for i, d in enumerate(rows)
     ]
 
@@ -137,16 +154,22 @@ def generate(spec: WorkloadSpec) -> List[Request]:
         sessions = rng.integers(0, spec.session_count, size=n)
     else:
         sessions = np.zeros(n, dtype=int)
-    if spec.output_tokens_max > spec.output_tokens:
+    if spec.output_tokens_max is None:
+        # unbounded generation: the engine clamps by the model's max
+        # sequence length (see UNBOUNDED_OUTPUT_TOKENS)
+        outs = np.full(n, UNBOUNDED_OUTPUT_TOKENS, dtype=int)
+    elif spec.output_tokens_max > spec.output_tokens:
         outs = rng.integers(spec.output_tokens, spec.output_tokens_max + 1,
                             size=n)
     else:
         outs = np.full(n, spec.output_tokens, dtype=int)
+    prefix = min(max(spec.prefix_tokens, 0), spec.prompt_tokens)
     return [
         Request(req_id=i, arrival_s=float(t),
                 prompt_tokens=spec.prompt_tokens,
                 output_tokens=int(outs[i]),
                 payload_bytes=spec.payload_bytes,
-                session_id=int(sessions[i]))
+                session_id=int(sessions[i]),
+                prefix_tokens=prefix)
         for i, t in enumerate(times)
     ]

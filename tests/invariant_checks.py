@@ -27,12 +27,13 @@ def latency_model() -> LatencyModel:
 
 def run_sim(workload: WorkloadSpec, policy_name: str, *,
             replicas: int = 1, router: str = "round-robin",
-            autoscale: bool = False, **policy_kw) -> SimResult:
+            autoscale: bool = False, memory=None,
+            **policy_kw) -> SimResult:
     policy = make_policy(policy_name, **policy_kw)
     return simulate_cluster(
         workload, policy, latency_model(),
         cluster=ClusterSpec(replicas=replicas, router=router,
-                            autoscale=autoscale))
+                            autoscale=autoscale, memory=memory))
 
 
 def policy_cap(policy_name: str, **policy_kw) -> int:
@@ -63,7 +64,9 @@ def check_all_complete_exactly_once(workload: WorkloadSpec,
 
 
 def check_stage_sanity(res: SimResult, cap: int) -> None:
-    """t_queue >= 0, batch_wait within t_queue, batch sizes <= policy cap."""
+    """t_queue >= 0, batch_wait within t_queue, batch sizes <= policy cap,
+    and the stage breakdown sums to completion − arrival (preemption must
+    move time between stages, never create or lose any)."""
     for t in res.traces:
         assert t.t_queue >= -1e-9, f"negative queue time {t.t_queue}"
         assert -1e-9 <= t.t_batch_wait <= t.t_queue + 1e-9, (
@@ -71,6 +74,9 @@ def check_stage_sanity(res: SimResult, cap: int) -> None:
         assert t.t_inference > 0
         assert 1 <= t.batch_size <= cap, (
             f"batch size {t.batch_size} exceeds cap {cap}")
+        assert abs(t.e2e - (t.done_s - t.request.arrival_s)) < 1e-6, (
+            f"stage breakdown {t.e2e} != done - arrival "
+            f"{t.done_s - t.request.arrival_s}")
 
 
 def check_busy_bound(res: SimResult) -> None:
@@ -104,3 +110,31 @@ def check_duration_covers_window(workload: WorkloadSpec,
     """Open-loop duration is max(workload window, last completion)."""
     last_done = max((t.done_s for t in res.traces), default=0.0)
     assert abs(res.duration_s - max(workload.duration_s, last_done)) < 1e-9
+
+
+def check_memory_invariants(res: SimResult) -> None:
+    """KV accounting: blocks never exceed the budget, occupancy is sane,
+    and every replica fully drains (no leaked/live blocks at the end)."""
+    m = res.memory
+    assert m is not None, "memory-enabled run produced no accounting"
+    assert m["peak_blocks"] <= m["total_blocks_per_replica"], (
+        f"allocated {m['peak_blocks']} of "
+        f"{m['total_blocks_per_replica']} budget blocks")
+    assert 0.0 <= m["peak_occupancy"] <= 1.0
+    assert 0.0 <= m["mean_occupancy"] <= 1.0 + 1e-9
+    assert 0.0 <= m["prefix_hit_rate"] <= 1.0
+    for p in m["per_replica"]:
+        assert p["peak_blocks"] <= p["total_blocks"]
+        assert p["referenced_blocks_end"] == 0, (
+            f"{p['referenced_blocks_end']} blocks still referenced after "
+            "the cluster drained")
+
+
+def check_token_results_match(res_a: SimResult, res_b: SimResult) -> None:
+    """Two runs served the same requests to the same token counts (the
+    prefix cache must only skip compute, never change results)."""
+    key = lambda res: sorted((t.request.req_id, t.request.prompt_tokens,
+                              t.request.output_tokens)
+                             for t in res.traces)
+    assert key(res_a) == key(res_b), \
+        "token-level results diverged between runs"

@@ -1,0 +1,361 @@
+"""Memory-aware serving: MemorySpec plumbing, KVCacheManager unit
+behavior, prefix caching, preemption/recompute, planner HBM rejection,
+and the unbounded-output clamp (the hypothesis-free twin of the memory
+properties in test_simulator_invariants)."""
+import pytest
+
+from repro.analysis.memory_model import (kv_bytes_per_token,
+                                         serving_hbm_headroom)
+from repro.calibrate.planner import plan_capacity
+from repro.configs import get_config
+from repro.core import BenchmarkJobSpec, JobResult, MemorySpec, run_stages
+from repro.core.analysis import memory_table, plan_table
+from repro.core.perfdb import PerfDB
+from repro.serving.batching import make_policy
+from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.latency_model import LatencyModel
+from repro.serving.memory import (KVCacheManager, ResolvedMemory,
+                                  resolve_memory)
+from repro.serving.workload import (UNBOUNDED_OUTPUT_TOKENS, WorkloadSpec,
+                                    generate)
+
+
+@pytest.fixture(scope="module")
+def lat():
+    return LatencyModel(get_config("gemma2-2b"), chips=4)
+
+
+def _manager(blocks=64, block_tokens=16, **kw):
+    spec = MemorySpec(block_tokens=block_tokens, num_blocks=blocks, **kw)
+    resolved = ResolvedMemory(total_blocks=blocks,
+                              kv_bytes_per_token=1024.0,
+                              max_model_len=4096,
+                              budget_bytes=blocks * block_tokens * 1024.0)
+    return KVCacheManager(spec, resolved)
+
+
+class TestMemorySpec:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            MemorySpec(block_tokens=0)
+        with pytest.raises(ValueError):
+            MemorySpec(preemption="lifo")
+        with pytest.raises(ValueError):
+            MemorySpec(util_fraction=0.0)
+
+    def test_resolve_from_model_config(self, lat):
+        r = resolve_memory(MemorySpec(), lat)
+        assert r.kv_bytes_per_token == kv_bytes_per_token(lat.cfg)
+        assert r.max_model_len == lat.cfg.max_seq_len
+        headroom = serving_hbm_headroom(lat.hw, lat.chips,
+                                        lat.weight_bytes())
+        assert r.budget_bytes == pytest.approx(headroom)
+        assert r.total_blocks == int(
+            headroom // (16 * r.kv_bytes_per_token))
+
+    def test_profile_oracle_needs_explicit_bytes(self):
+        from repro.serving.latency_model import FittedLatencyModel
+        fitted = FittedLatencyModel(prefill_coef=(1e-3, 1e-6, 0.0),
+                                    decode_coef=(1e-3, 1e-5, 0.0))
+        with pytest.raises(ValueError, match="kv_bytes_per_token"):
+            resolve_memory(MemorySpec(), fitted)
+        with pytest.raises(ValueError, match="hbm_gb"):
+            resolve_memory(MemorySpec(kv_bytes_per_token=1024.0), fitted)
+        r = resolve_memory(MemorySpec(kv_bytes_per_token=1024.0,
+                                      hbm_gb=0.001), fitted)
+        assert r.total_blocks >= 1
+
+    def test_round_trip_through_job_spec(self):
+        spec = BenchmarkJobSpec(
+            job_id="m0",
+            cluster={"replicas": 2,
+                     "memory": {"block_tokens": 32, "hbm_gb": 2.0,
+                                "preemption": "largest"}})
+        again = BenchmarkJobSpec.from_dict(spec.to_dict())
+        assert again == spec
+        assert again.cluster.memory.block_tokens == 32
+        assert again.cluster.memory.preemption == "largest"
+
+
+class TestKVCacheManager:
+    def test_allocate_extend_free_accounting(self):
+        kv = _manager(blocks=10, block_tokens=16)
+        assert kv.allocate(1, 33, 0.0) == 0          # 3 blocks
+        assert kv.resident_blocks == 3
+        assert kv.extend(1, 48, 0.1)                 # same 3 blocks
+        assert kv.resident_blocks == 3
+        assert kv.extend(1, 49, 0.2)                 # crosses → 4 blocks
+        assert kv.resident_blocks == 4
+        kv.free(1, 0.3)
+        assert kv.resident_blocks == 0
+        assert kv.referenced_blocks() == 0
+        assert kv.peak_blocks == 4
+
+    def test_allocation_fails_beyond_budget(self):
+        kv = _manager(blocks=4, block_tokens=16)
+        assert kv.allocate(1, 48, 0.0) == 0          # 3 of 4 blocks
+        assert kv.allocate(2, 32, 0.0) is None       # needs 2, 1 free
+        assert kv.resident_blocks == 3               # failed alloc is clean
+        assert kv.extend(1, 64, 0.1)                 # 4th block: fits
+        assert not kv.extend(1, 65, 0.2)             # 5th: over budget
+        assert kv.resident_blocks == 4
+
+    def test_prefix_cache_hit_and_refcount(self):
+        kv = _manager(blocks=32, block_tokens=16)
+        # 64-token shared prefix = 4 blocks; 96-token prompt = 6 blocks
+        assert kv.allocate(1, 96, 0.0, session_id=7, prefix_tokens=64) == 0
+        assert kv.resident_blocks == 6
+        # second request of the session hits all 4 prefix blocks
+        assert kv.allocate(2, 96, 0.1, session_id=7, prefix_tokens=64) == 64
+        assert kv.resident_blocks == 8               # only 2 new private
+        kv.free(1, 0.2)
+        kv.free(2, 0.3)
+        # prefix blocks stay cached (resident but unreferenced)
+        assert kv.resident_blocks == 4
+        assert kv.referenced_blocks() == 0
+        assert kv.allocate(3, 96, 0.4, session_id=7, prefix_tokens=64) == 64
+        assert kv.stats(1.0)["prefix_hit_rate"] == pytest.approx(
+            128 / (96 * 3))
+
+    def test_idle_prefix_evicted_under_pressure(self):
+        kv = _manager(blocks=8, block_tokens=16)
+        kv.allocate(1, 64, 0.0, session_id=1, prefix_tokens=64)  # 4 blocks
+        kv.free(1, 0.1)                              # cached, refs=0
+        assert kv.resident_blocks == 4
+        assert kv.allocate(2, 96, 0.2) == 0          # 6 blocks: must evict
+        assert kv.resident_blocks == 6
+        assert kv.evictions == 1
+
+    def test_different_sessions_do_not_share(self):
+        kv = _manager(blocks=32, block_tokens=16)
+        kv.allocate(1, 64, 0.0, session_id=1, prefix_tokens=64)
+        assert kv.allocate(2, 64, 0.1, session_id=2, prefix_tokens=64) == 0
+
+    def test_prefix_caching_disabled(self):
+        kv = _manager(blocks=32, prefix_caching=False)
+        kv.allocate(1, 64, 0.0, session_id=1, prefix_tokens=64)
+        assert kv.allocate(2, 64, 0.1, session_id=1,
+                           prefix_tokens=64) == 0
+        assert kv.stats(1.0)["prefix_hit_rate"] == 0.0
+
+    def test_own_idle_prefix_sacrificed_not_deadlocked(self):
+        """A session whose cached prefix starves its own next allocation
+        must evict that prefix and allocate cold, not fail forever
+        (head-of-line hang on an otherwise empty replica)."""
+        kv = _manager(blocks=10, block_tokens=16)
+        # cache a 6-block prefix, then free it (idle, refs=0)
+        kv.allocate(1, 96, 0.0, session_id=5, prefix_tokens=96)
+        kv.free(1, 0.1)
+        assert kv.resident_blocks == 6
+        # same session, shorter shareable prefix but a 10-block prompt:
+        # hits 2 blocks but needs 8 fresh with only 4 free — must drop
+        # its own idle prefix and succeed cold
+        assert kv.allocate(2, 160, 0.2, session_id=5,
+                           prefix_tokens=32) == 0
+        assert kv.resident_blocks == 10
+        assert kv.evictions >= 1
+        kv.free(2, 0.3)
+        assert kv.referenced_blocks() == 0
+
+    def test_num_blocks_bypasses_byte_math_for_profiles(self):
+        from repro.serving.latency_model import FittedLatencyModel
+        fitted = FittedLatencyModel(prefill_coef=(1e-3, 1e-6, 0.0),
+                                    decode_coef=(1e-3, 1e-5, 0.0))
+        r = resolve_memory(MemorySpec(num_blocks=512), fitted)
+        assert r.total_blocks == 512
+
+
+WL_SHARED = WorkloadSpec(rate=120, duration_s=1.5, prompt_tokens=256,
+                         prefix_tokens=192, output_tokens=2,
+                         output_tokens_max=6, session_count=4, seed=7)
+
+
+class TestMemoryAwareSimulation:
+    def test_budget_never_exceeded_and_drains(self, lat):
+        res = simulate_cluster(
+            WL_SHARED, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(memory=MemorySpec(num_blocks=64)))
+        m = res.memory
+        assert m["peak_blocks"] <= m["total_blocks_per_replica"]
+        assert 0.0 <= m["peak_occupancy"] <= 1.0
+        for p in m["per_replica"]:
+            assert p["referenced_blocks_end"] == 0
+        assert len(res.traces) == len(generate(WL_SHARED))
+
+    def test_prefix_cache_does_not_change_token_results(self, lat):
+        results = {}
+        for pc in (True, False):
+            res = simulate_cluster(
+                WL_SHARED, make_policy("continuous", max_batch=8), lat,
+                cluster=ClusterSpec(
+                    memory=MemorySpec(prefix_caching=pc)))
+            results[pc] = sorted(
+                (t.request.req_id, t.request.output_tokens)
+                for t in res.traces)
+        assert results[True] == results[False]
+
+    def test_tight_budget_preempts_and_completes(self, lat):
+        wl = WorkloadSpec(rate=40, duration_s=1.5, prompt_tokens=64,
+                          output_tokens=96, output_tokens_max=192,
+                          session_count=2, seed=3)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(
+                memory=MemorySpec(num_blocks=48, prefix_caching=False)))
+        m = res.memory
+        assert m["preemptions"] > 0
+        assert m["peak_blocks"] <= m["total_blocks_per_replica"]
+        assert len(res.traces) == len(generate(wl))
+        assert any(t.preemptions > 0 for t in res.traces)
+        # preemption moves time between stages but never loses any
+        for t in res.traces:
+            assert t.e2e == pytest.approx(t.done_s - t.request.arrival_s)
+
+    def test_largest_victim_policy_runs(self, lat):
+        wl = WorkloadSpec(rate=40, duration_s=1.5, prompt_tokens=64,
+                          output_tokens=96, output_tokens_max=192,
+                          session_count=2, seed=3)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(
+                memory=MemorySpec(num_blocks=48, prefix_caching=False,
+                                  preemption="largest")))
+        assert len(res.traces) == len(generate(wl))
+        assert res.memory["preemptions"] > 0
+
+    def test_budget_below_one_request_rejected(self, lat):
+        with pytest.raises(ValueError, match="cannot hold"):
+            simulate_cluster(
+                WL_SHARED, make_policy("continuous", max_batch=8), lat,
+                cluster=ClusterSpec(memory=MemorySpec(num_blocks=4)))
+
+    def test_request_level_policy_bounds_batch_working_set(self, lat):
+        # each sequence needs 5 blocks (68 tokens); 16 blocks hold 3
+        wl = WorkloadSpec(rate=400, duration_s=0.5, prompt_tokens=64,
+                          output_tokens=4, seed=9)
+        res = simulate_cluster(
+            wl, make_policy("tfs", max_batch=8, timeout_s=0.002), lat,
+            cluster=ClusterSpec(memory=MemorySpec(num_blocks=16)))
+        assert len(res.traces) == len(generate(wl))
+        assert max(t.batch_size for t in res.traces) <= 3
+        assert res.memory["peak_blocks"] <= 16
+
+    def test_unbounded_output_clamped_by_max_seq_len(self, lat):
+        wl = WorkloadSpec(rate=8, duration_s=0.5, prompt_tokens=32,
+                          output_tokens=4, output_tokens_max=None, seed=1)
+        reqs = generate(wl)
+        assert all(r.output_tokens == UNBOUNDED_OUTPUT_TOKENS
+                   for r in reqs)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=4), lat,
+            cluster=ClusterSpec(memory=MemorySpec(
+                num_blocks=64, max_model_len=128)))
+        # decode stops at max_model_len - prompt, not the sentinel
+        assert len(res.traces) == len(reqs)
+        m = res.memory
+        assert m["peak_blocks"] <= m["total_blocks_per_replica"]
+
+    def test_unbounded_output_clamped_without_memory_too(self):
+        """Even with memory unmodeled, decode is bounded by the model's
+        max_seq_len — the 32k sentinel must not run past the context
+        window (or blow up simulated time)."""
+        import dataclasses as dc
+        cfg = dc.replace(get_config("gemma2-2b"), max_seq_len=64)
+        small = LatencyModel(cfg, chips=4)
+        wl = WorkloadSpec(rate=8, duration_s=0.5, prompt_tokens=32,
+                          output_tokens=4, output_tokens_max=None, seed=1)
+        res = simulate_cluster(wl, make_policy("continuous", max_batch=4),
+                               small, cluster=ClusterSpec())
+        assert len(res.traces) == len(generate(wl))
+        # 32 decode steps each, not 32768: inference stays sub-second
+        assert max(t.t_inference for t in res.traces) < 1.0
+
+    def test_autoscaled_replicas_get_managers(self, lat):
+        wl = WorkloadSpec(rate=600, duration_s=2, prompt_tokens=128,
+                          output_tokens=8, seed=4)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(replicas=1, autoscale=True, max_replicas=3,
+                                scale_interval_s=0.2, spawn_delay_s=0.1,
+                                memory=MemorySpec()))
+        assert res.replicas > 1
+        assert len(res.memory["per_replica"]) == res.replicas
+
+
+class TestPlumbingAndAnalysis:
+    def test_run_stages_records_memory(self):
+        spec = BenchmarkJobSpec(
+            job_id="mem1", chips=4,
+            software={"policy": "continuous", "max_batch": 8},
+            cluster={"replicas": 1, "memory": {"block_tokens": 16}},
+            workload={"rate": 60, "duration_s": 1, "prompt_tokens": 256,
+                      "prefix_tokens": 128, "output_tokens": 2,
+                      "session_count": 2, "seed": 0})
+        result = run_stages(spec)
+        assert result.memory is not None
+        assert 0.0 <= result.metrics["prefix_hit_rate"] <= 1.0
+        assert "kv_peak_occupancy" in result.metrics
+        rec = result.to_record()
+        assert rec["memory"]["total_blocks_per_replica"] > 0
+        assert JobResult.from_record(rec).memory == result.memory
+
+    def test_memory_table(self):
+        db = PerfDB()
+        db.append({"job_id": "job-mem", "arch": "gemma2-2b",
+                   "policy": "cont",
+                   "memory": {"total_blocks_per_replica": 100,
+                              "peak_occupancy": 0.5, "mean_occupancy": 0.25,
+                              "prefix_hit_rate": 0.8, "preemptions": 3,
+                              "evictions": 1}})
+        db.append({"job_id": "job-nomem", "arch": "x", "policy": "tfs"})
+        table = memory_table(db)
+        assert "job-mem" in table and "50.00%" in table
+        assert "job-nomem" not in table
+        assert "(no records" in memory_table(db, job_id="absent")
+
+    def test_plan_rejects_oom_config_with_reason(self, lat):
+        wl = WorkloadSpec(rate=100, duration_s=1, prompt_tokens=512,
+                          output_tokens=16, output_tokens_max=64, seed=0)
+        plan = plan_capacity(
+            lat, wl, slo_latency_s=2.0, slo_target=0.5,
+            replicas=(1,), policies=("continuous",),
+            max_batches=(4, 512), memory=MemorySpec(hbm_gb=0.5))
+        by_mb = {c.max_batch: c for c in plan.candidates}
+        assert by_mb[4].infeasible_reason is None
+        assert by_mb[512].infeasible_reason is not None
+        assert "exceeds" in by_mb[512].infeasible_reason
+        assert not by_mb[512].meets_slo
+        assert by_mb[512].objective == float("inf")
+        table = plan_table(plan)
+        assert "REJECTED" in table
+
+    def test_plan_sizes_unbounded_output_at_max_model_len(self, lat):
+        """output_tokens_max=None must be costed at max_model_len per
+        slot, so the candidate is rejected up front instead of the
+        simulator crashing on a budget that cannot hold one sequence."""
+        wl = WorkloadSpec(rate=20, duration_s=0.5, prompt_tokens=32,
+                          output_tokens=4, output_tokens_max=None, seed=0)
+        plan = plan_capacity(
+            lat, wl, slo_latency_s=2.0, slo_target=0.5,
+            replicas=(1,), policies=("continuous",), max_batches=(4,),
+            memory=MemorySpec(num_blocks=64, max_model_len=4096))
+        (cand,) = plan.candidates
+        assert cand.infeasible_reason is not None
+        assert "4096" in cand.infeasible_reason
+
+    def test_plan_with_memory_still_raises_on_config_typos(self, lat):
+        """The per-candidate KVBudgetError catch must not swallow
+        genuine configuration mistakes."""
+        wl = WorkloadSpec(rate=20, duration_s=0.5, output_tokens=2, seed=0)
+        with pytest.raises(ValueError, match="unknown router"):
+            plan_capacity(lat, wl, slo_latency_s=1.0, replicas=(1,),
+                          policies=("continuous",),
+                          routers=("least-loded",),
+                          memory=MemorySpec(num_blocks=512))
+
+    def test_plan_without_memory_unchanged(self, lat):
+        wl = WorkloadSpec(rate=60, duration_s=1, output_tokens=2, seed=0)
+        plan = plan_capacity(lat, wl, slo_latency_s=1.0, replicas=(1,),
+                             policies=("continuous",))
+        assert all(c.infeasible_reason is None for c in plan.candidates)
+        assert plan.best is not None

@@ -1,0 +1,119 @@
+"""check_regression.py: the bench-regression CI gate must pass the
+committed baseline's own numbers and fail synthetically degraded ones."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.check_regression import compare, get_path, main  # noqa: E402
+
+BASELINE = {
+    "default_tolerance": 0.15,
+    "metrics": {
+        "cluster:ramp/continuous.throughput_rps":
+            {"value": 200.0, "direction": "higher"},
+        "cluster:ramp/continuous.p99_s":
+            {"value": 0.5, "direction": "lower"},
+        "calibrate:measured_fc.holdout.mean_rel_err":
+            {"value": 0.02, "direction": "lower", "tolerance": 7.0},
+    },
+}
+
+GOOD = {
+    "cluster": {"ramp/continuous": {"throughput_rps": 205.0,
+                                    "p99_s": 0.48}},
+    "calibrate": {"measured_fc": {"holdout": {"mean_rel_err": 0.05}}},
+}
+
+
+def _degraded():
+    bad = json.loads(json.dumps(GOOD))
+    bad["cluster"]["ramp/continuous"]["throughput_rps"] = 120.0  # -40%
+    bad["cluster"]["ramp/continuous"]["p99_s"] = 1.2             # +140%
+    return bad
+
+
+class TestCompare:
+    def test_good_numbers_pass(self):
+        rows, failures = compare(BASELINE, GOOD)
+        assert failures == []
+        assert all(r[-1] == "ok" for r in rows)
+
+    def test_degraded_numbers_fail(self):
+        rows, failures = compare(BASELINE, _degraded())
+        assert "cluster:ramp/continuous.throughput_rps" in failures
+        assert "cluster:ramp/continuous.p99_s" in failures
+
+    def test_improvements_never_fail(self):
+        better = json.loads(json.dumps(GOOD))
+        better["cluster"]["ramp/continuous"]["throughput_rps"] = 400.0
+        better["cluster"]["ramp/continuous"]["p99_s"] = 0.01
+        _, failures = compare(BASELINE, better)
+        assert failures == []
+
+    def test_missing_metric_fails(self):
+        partial = {"cluster": GOOD["cluster"]}   # calibrate file absent
+        rows, failures = compare(BASELINE, partial)
+        assert "calibrate:measured_fc.holdout.mean_rel_err" in failures
+        assert any(r[-1] == "MISSING" for r in rows)
+
+    def test_per_metric_tolerance_overrides_default(self):
+        # holdout 0.05 is +150% over 0.02 but tolerance is 7.0 (8×)
+        _, failures = compare(BASELINE, GOOD)
+        assert failures == []
+        eightfold = json.loads(json.dumps(GOOD))
+        eightfold["calibrate"]["measured_fc"]["holdout"]["mean_rel_err"] \
+            = 0.2
+        _, failures = compare(BASELINE, eightfold)
+        assert failures == ["calibrate:measured_fc.holdout.mean_rel_err"]
+
+    def test_get_path(self):
+        assert get_path({"a": {"b": 1}}, "a.b") == 1
+        assert get_path({"a": {"b": 1}}, "a.c") is None
+        assert get_path(None, "a") is None
+
+
+class TestMainExitCodes:
+    def _write(self, tmp_path, name, payload):
+        p = tmp_path / name
+        p.write_text(json.dumps(payload))
+        return str(p)
+
+    def test_exit_zero_on_good(self, tmp_path, capsys):
+        args = ["--baseline", self._write(tmp_path, "base.json", BASELINE),
+                f"cluster={self._write(tmp_path, 'c.json', GOOD['cluster'])}",
+                "calibrate="
+                + self._write(tmp_path, "k.json", GOOD["calibrate"])]
+        assert main(args) == 0
+        assert "within tolerance" in capsys.readouterr().out
+
+    def test_exit_nonzero_on_degraded(self, tmp_path, capsys):
+        bad = _degraded()
+        args = ["--baseline", self._write(tmp_path, "base.json", BASELINE),
+                f"cluster={self._write(tmp_path, 'c.json', bad['cluster'])}",
+                "calibrate="
+                + self._write(tmp_path, "k.json", bad["calibrate"])]
+        assert main(args) == 1
+        captured = capsys.readouterr()
+        assert "REGRESSION" in captured.err
+        assert "FAIL" in captured.out
+
+    def test_committed_baseline_schema_is_valid(self):
+        path = Path(__file__).resolve().parent.parent / "benchmarks" \
+            / "baselines" / "ci_baseline.json"
+        baseline = json.loads(path.read_text())
+        assert baseline["metrics"], "empty committed baseline"
+        for name, entry in baseline["metrics"].items():
+            ns, _, rest = name.partition(":")
+            assert ns in ("cluster", "calibrate") and rest, name
+            assert entry["direction"] in ("higher", "lower")
+            float(entry["value"])
+        # the issue's headline metrics are all gated
+        keys = set(baseline["metrics"])
+        assert any("throughput" in k for k in keys)
+        assert any("p99" in k for k in keys)
+        assert any("holdout" in k for k in keys)
+        assert any("prefix_hit_rate" in k for k in keys)

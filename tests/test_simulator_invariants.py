@@ -7,19 +7,25 @@ benchmark numbers are only as good as the harness they come from):
   * per-request stage sanity: t_queue >= 0, t_batch_wait within t_queue,
     batch sizes never exceed the policy cap,
   * total busy_s <= duration_s × replicas (utilization <= 1),
-  * closed-loop in-flight never exceeds spec.concurrency.
+  * closed-loop in-flight never exceeds spec.concurrency,
+  * memory layer: block allocations never exceed the HBM budget,
+    prefix-cache hits never change token-level results, preempted
+    requests always eventually complete, occupancy is 0 on drain.
 
 Each property runs through the full cluster event loop across workload
 kinds, batching policies, replica counts and routers.
 """
 from hypothesis import given, settings, strategies as st
 
+from repro.serving.memory import MemorySpec
 from repro.serving.workload import WorkloadSpec
 
 from invariant_checks import (check_all_complete_exactly_once,
                               check_busy_bound, check_closed_concurrency,
                               check_duration_covers_window,
-                              check_stage_sanity, policy_cap, run_sim)
+                              check_memory_invariants, check_stage_sanity,
+                              check_token_results_match, policy_cap,
+                              run_sim)
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -96,3 +102,72 @@ def test_closed_loop_concurrency_cap(concurrency, policy, max_batch,
     check_all_complete_exactly_once(wl, res)
     check_closed_concurrency(wl, res)
     check_busy_bound(res)
+
+
+# ---- memory layer ----------------------------------------------------------
+@st.composite
+def memory_workloads(draw):
+    """Generation workloads with session-shared prefixes (the regime the
+    KV layer exists for)."""
+    prompt = draw(st.integers(16, 256))
+    return WorkloadSpec(
+        kind=draw(st.sampled_from(["poisson", "uniform", "burst"])),
+        rate=draw(st.floats(20, 150)),
+        duration_s=draw(st.floats(0.3, 1.2)),
+        prompt_tokens=prompt,
+        prefix_tokens=draw(st.integers(0, prompt)),
+        output_tokens=draw(st.integers(1, 16)),
+        output_tokens_max=draw(st.sampled_from([0, 32])),
+        payload_bytes=4096,
+        session_count=draw(st.integers(1, 6)),
+        seed=draw(st.integers(0, 2**16)),
+    )
+
+
+def _memory_spec(draw_blocks, wl, block_tokens, **kw):
+    """A budget that always fits the largest single request (anything
+    smaller is rejected by simulate_cluster up front) but is often tight
+    enough to force eviction and preemption."""
+    worst = wl.prompt_tokens + max(wl.output_tokens,
+                                   wl.output_tokens_max or 0, 1)
+    floor = -(-worst // block_tokens)
+    return MemorySpec(block_tokens=block_tokens,
+                      num_blocks=floor + draw_blocks, **kw)
+
+
+@given(wl=memory_workloads(), policy=policies,
+       max_batch=st.integers(1, 16), replicas=st.integers(1, 3),
+       router=routers, block_tokens=st.sampled_from([8, 16, 32]),
+       extra_blocks=st.integers(0, 48),
+       victim=st.sampled_from(["youngest", "largest"]))
+@settings(**SETTINGS)
+def test_memory_budget_and_completion(wl, policy, max_batch, replicas,
+                                      router, block_tokens, extra_blocks,
+                                      victim):
+    """Blocks never exceed the budget, preempted requests still complete,
+    and every replica drains to zero referenced blocks."""
+    mem = _memory_spec(extra_blocks, wl, block_tokens, preemption=victim)
+    kw = _policy_kw(policy, max_batch)
+    res = run_sim(wl, policy, replicas=replicas, router=router,
+                  memory=mem, **kw)
+    check_all_complete_exactly_once(wl, res)
+    check_memory_invariants(res)
+    check_busy_bound(res)
+
+
+@given(wl=memory_workloads(), max_batch=st.integers(1, 16),
+       block_tokens=st.sampled_from([8, 16, 32]),
+       extra_blocks=st.integers(8, 64))
+@settings(**SETTINGS)
+def test_prefix_cache_transparent_to_results(wl, max_batch, block_tokens,
+                                             extra_blocks):
+    """Prefix-cache hits skip compute but never change which requests
+    complete or how many tokens they produce."""
+    kw = _policy_kw("continuous", max_batch)
+    runs = [run_sim(wl, "continuous",
+                    memory=_memory_spec(extra_blocks, wl, block_tokens,
+                                        prefix_caching=pc), **kw)
+            for pc in (True, False)]
+    check_token_results_match(runs[0], runs[1])
+    for res in runs:
+        check_memory_invariants(res)
