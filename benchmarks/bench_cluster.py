@@ -1,7 +1,7 @@
 """Cluster-scale serving: throughput & p99-SLO attainment across
 replicas × batching policy × router.
 
-Five sections:
+Six sections:
   (a) ramp knee-finding — window vs preferred vs continuous batching on a
       stepped-rate generation workload (continuous should win throughput
       at equal-or-better p99);
@@ -12,7 +12,10 @@ Five sections:
   (e) memory pressure — paged KV-cache accounting: prefix caching must
       sustain ≥ 1.3× throughput on a shared-prefix chat workload at equal
       HBM budget, and a halved budget must preempt/recompute rather than
-      over-allocate while every request still completes.
+      over-allocate while every request still completes;
+  (f) disaggregated prefill/decode serving — at a matched chip count on a
+      mixed long-prefill/short-decode workload, a 3+1 split must beat 4
+      colocated replicas on p99 TTFT (and TPOT).
 
 ``--smoke`` shrinks durations/grids for CI; ``--json PATH`` additionally
 writes the metrics dict to PATH (the perf-regression lane's input).
@@ -29,7 +32,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from repro.configs import get_config
 from repro.core.analysis import saturation_knee
 from repro.serving.batching import make_policy
-from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.cluster import ClusterSpec, DisaggSpec, simulate_cluster
 from repro.serving.latency_model import LatencyModel
 from repro.serving.memory import MemorySpec
 from repro.serving.simulator import simulate
@@ -211,6 +214,50 @@ def memory_pressure(lm, smoke, out):
          f"all_{expected}_completed=True")
 
 
+def disaggregation_smoke(lm, smoke, out):
+    """(f) prefill/decode disaggregation vs colocated at matched chips on
+    a mixed long-prefill/short-decode workload: the split pools must win
+    p99 TTFT (and TPOT) — phase-aware serving's core claim."""
+    ttft_slo, tpot_slo = 0.35, 0.03
+    wl = _gen_workload(rate=280, duration_s=2 if smoke else 4,
+                       prompt_tokens=64, prompt_tokens_max=4096,
+                       output_tokens=2, output_tokens_max=8, seed=6)
+    configs = {
+        "colocated": ClusterSpec(replicas=4, router="least-loaded"),
+        "disaggregated": ClusterSpec(disaggregation=DisaggSpec(
+            prefill_replicas=3, decode_replicas=1,
+            prefill_chunk_tokens=512, prefill_max_batch=8)),
+    }
+    stats = {}
+    for label, cluster in configs.items():
+        res, us = timed(
+            simulate_cluster, wl,
+            make_policy("continuous", max_batch=16, max_prefill=8), lm,
+            cluster=cluster)
+        s = dict(res.summary(),
+                 goodput_rps=res.goodput(ttft_slo, tpot_slo))
+        stats[label] = s
+        out[f"disagg/{label}"] = s
+        emit(f"cluster.disagg.{label}", us,
+             f"ttft_p99={s['ttft_p99_s']*1e3:.0f}ms;"
+             f"tpot_p99={s['tpot_p99_s']*1e3:.1f}ms;"
+             f"goodput={s['goodput_rps']:.0f}rps")
+    dis, col = stats["disaggregated"], stats["colocated"]
+    ttft_ratio = col["ttft_p99_s"] / max(dis["ttft_p99_s"], 1e-12)
+    tpot_ratio = col["tpot_p99_s"] / max(dis["tpot_p99_s"], 1e-12)
+    out["disagg/ratios"] = {"ttft_p99_ratio": ttft_ratio,
+                            "tpot_p99_ratio": tpot_ratio}
+    emit("cluster.finding.disagg_vs_colocated", 0.0,
+         f"ttft_p99_ratio={ttft_ratio:.2f}x;"
+         f"tpot_p99_ratio={tpot_ratio:.2f}x;target>1x")
+    assert dis["ttft_p99_s"] < col["ttft_p99_s"], \
+        (f"disaggregated p99 TTFT {dis['ttft_p99_s']:.3f}s did not beat "
+         f"colocated {col['ttft_p99_s']:.3f}s at matched chip count")
+    assert dis["tpot_p99_s"] < col["tpot_p99_s"], \
+        (f"disaggregated p99 TPOT {dis['tpot_p99_s']:.4f}s did not beat "
+         f"colocated {col['tpot_p99_s']:.4f}s")
+
+
 def run(smoke: bool = False, json_path: str | None = None) -> None:
     lm = LatencyModel(get_config(MODEL), chips=CHIPS)
     out = {}
@@ -219,6 +266,7 @@ def run(smoke: bool = False, json_path: str | None = None) -> None:
     saturation_scaling(lm, smoke, out)
     autoscale_demo(lm, smoke, out)
     memory_pressure(lm, smoke, out)
+    disaggregation_smoke(lm, smoke, out)
     # knee of the ramp per policy (for the writeup)
     wl = _gen_workload(kind="ramp", duration_s=2 if smoke else 6,
                        ramp_min_rate=50, ramp_max_rate=500,

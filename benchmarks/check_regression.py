@@ -13,7 +13,15 @@ Baseline schema::
         "<namespace>:<dotted.path>": {
           "value": 123.4,            # the committed reference number
           "direction": "higher",     # "higher" | "lower" is better
-          "tolerance": 0.15          # optional per-metric override
+          "tolerance": 0.15,         # optional per-metric override
+          "abs_tolerance": 0.001     # optional absolute floor: a metric
+                                     # only fails when it moved in the bad
+                                     # direction by more than `tolerance`
+                                     # relatively AND `abs_tolerance`
+                                     # absolutely (for near-zero metrics
+                                     # like per-token latencies, where a
+                                     # microsecond of drift is a huge
+                                     # relative delta but no regression)
         }, ...
       }
     }
@@ -85,7 +93,13 @@ def compare(baseline: Dict[str, Any], inputs: Dict[str, Dict[str, Any]],
             delta = 0.0 if cur == 0 else float("inf") * (1 if cur > 0
                                                          else -1)
         worse = -delta if direction == "higher" else delta
-        status = "FAIL" if worse > tol else "ok"
+        failed = worse > tol
+        abs_tol = entry.get("abs_tolerance")
+        if failed and abs_tol is not None:
+            worse_abs = (base - cur) if direction == "higher" \
+                else (cur - base)
+            failed = worse_abs > float(abs_tol)
+        status = "FAIL" if failed else "ok"
         if status == "FAIL":
             failures.append(name)
         rows.append((name, base, cur, delta, status))

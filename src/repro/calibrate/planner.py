@@ -17,7 +17,7 @@ from typing import Any, Dict, List, Optional, Sequence
 from repro.calibrate.profile import CalibrationProfile, load_profile
 from repro.core.results import JobResult
 from repro.core.spec import PlanSpec
-from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.cluster import ClusterSpec, DisaggSpec, simulate_cluster
 from repro.serving.latency_model import NETWORKS
 from repro.serving.memory import (GiB, KVBudgetError, MemorySpec,
                                   resolve_memory)
@@ -31,6 +31,9 @@ class PlanCandidate:
     ``infeasible_reason`` is set when the memory check rejected the
     candidate before simulation (its KV working set cannot fit the
     per-replica HBM budget, however good its latency would be).
+    ``split`` is ``(prefill_replicas, decode_replicas)`` for a
+    disaggregated candidate, None for colocated; ``replicas`` is always
+    the total chip-normalizing replica count.
     """
     replicas: int
     policy: str
@@ -39,6 +42,7 @@ class PlanCandidate:
     meets_slo: bool
     objective: float                # the minimized metric's value
     max_batch: int = 0              # 0 in legacy single-max_batch plans
+    split: Optional[Sequence[int]] = None
     infeasible_reason: Optional[str] = None
 
     def to_dict(self) -> Dict[str, Any]:
@@ -49,10 +53,12 @@ class PlanCandidate:
 class PlanResult:
     """The full grid, sorted feasible-first then by objective."""
     profile_key: str
-    slo_latency_s: float
+    slo_latency_s: Optional[float]
     slo_target: float
     objective: str
     candidates: List[PlanCandidate]
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
 
     @property
     def best(self) -> Optional[PlanCandidate]:
@@ -86,16 +92,17 @@ def _memory_working_set_reason(memory: MemorySpec, oracle,
     estimate is conservative (every slot at max length) — that is the
     regime a capacity plan must survive."""
     resolved = resolve_memory(memory, oracle)
+    # mixed-prompt workloads size the check at the longest prompt they
+    # can draw — the conservative regime the plan must survive
+    prompt = max(workload.prompt_tokens, workload.prompt_tokens_max)
     out_max = workload.output_tokens_max
     if out_max is None:
         # unbounded generation: the engine clamps each sequence at
         # max_model_len, so that is the per-slot working set
-        tokens = max(resolved.max_model_len, workload.prompt_tokens + 1)
+        tokens = max(resolved.max_model_len, prompt + 1)
     else:
-        tokens = workload.prompt_tokens + max(workload.output_tokens,
-                                              out_max, 1)
-        tokens = min(tokens, max(resolved.max_model_len,
-                                 workload.prompt_tokens + 1))
+        tokens = prompt + max(workload.output_tokens, out_max, 1)
+        tokens = min(tokens, max(resolved.max_model_len, prompt + 1))
     bt = memory.block_tokens
     blocks = -(-tokens // bt) * max_batch
     if blocks <= resolved.total_blocks:
@@ -109,14 +116,22 @@ def _memory_working_set_reason(memory: MemorySpec, oracle,
             f"({resolved.total_blocks} × {bt}-token blocks)")
 
 
+_CONTINUOUS_NAMES = ("continuous", "orca", "vllm")
+
+
 def plan_capacity(profile, workload: WorkloadSpec, *,
-                  slo_latency_s: float, slo_target: float = 0.99,
+                  slo_latency_s: Optional[float] = None,
+                  slo_target: float = 0.99,
+                  ttft_slo_s: Optional[float] = None,
+                  tpot_slo_s: Optional[float] = None,
                   replicas: Sequence[int] = (1, 2, 4),
                   policies: Sequence[str] = ("tfs", "continuous"),
                   routers: Sequence[str] = ("least-loaded",),
                   max_batch: int = 16,
                   max_batches: Sequence[int] = (),
                   max_prefill: int = 8,
+                  prefill_decode_splits: Sequence[Sequence[int]] = (),
+                  kv_network: str = "infiniband",
                   network: str = "lan",
                   objective: str = "cost_per_1k_req",
                   memory: Optional[MemorySpec] = None) -> PlanResult:
@@ -126,6 +141,17 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
     ``model@hardware`` form, or any ready ``LatencyOracle`` (so a plan
     can also be run against the analytic roofline model directly).
 
+    SLOs: ``slo_latency_s`` constrains e2e latency; ``ttft_slo_s`` /
+    ``tpot_slo_s`` constrain the phases real LLM deployments are judged
+    by.  Attainment is joint — a request counts only when it meets
+    *every* provided SLO — and at least one SLO must be given.
+
+    ``prefill_decode_splits`` adds disaggregated candidates to the grid:
+    each ``(prefill, decode)`` pair is simulated as split pools (total
+    replicas = prefill + decode, KV handoff over ``kv_network``) under
+    every continuous-batching policy/router/slot combination, so the
+    planner can recommend colocated vs disaggregated per workload.
+
     With ``memory`` set the plan is memory-*and*-latency-aware: every
     candidate whose KV working set cannot fit the per-replica HBM budget
     is rejected up front (``infeasible_reason`` says why), and surviving
@@ -133,6 +159,9 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
     shows up in their latency numbers.  ``max_batches`` widens the grid
     over decode-slot counts (default: just ``max_batch``).
     """
+    if slo_latency_s is None and ttft_slo_s is None and tpot_slo_s is None:
+        raise ValueError("plan_capacity needs at least one SLO: "
+                         "slo_latency_s, ttft_slo_s, or tpot_slo_s")
     if isinstance(profile, CalibrationProfile):
         oracle, key = profile.to_latency_model(), profile.key
     elif isinstance(profile, (str, dict)):
@@ -144,59 +173,96 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
     if isinstance(memory, dict):
         memory = MemorySpec.from_dict(memory)
     mbs = tuple(max_batches) or (max_batch,)
+    phase_slos = ttft_slo_s is not None or tpot_slo_s is not None
+
+    # grid rows: (total_replicas, policy, router, max_batch, split)
+    grid: List[tuple] = [
+        (int(n), pol, router, int(mb), None)
+        for n, pol, router, mb in itertools.product(replicas, policies,
+                                                    routers, mbs)]
+    # disaggregation needs a decode loop to migrate into, so split
+    # candidates only pair with continuous policies (falling back to
+    # plain "continuous" when the grid has none)
+    disagg_pols = [p for p in policies if p in _CONTINUOUS_NAMES] \
+        or ["continuous"]
+    for split in prefill_decode_splits:
+        pre, dec = int(split[0]), int(split[1])
+        for pol, router, mb in itertools.product(disagg_pols, routers,
+                                                 mbs):
+            grid.append((pre + dec, pol, router, int(mb), (pre, dec)))
 
     candidates: List[PlanCandidate] = []
-    for n, pol, router, mb in itertools.product(replicas, policies,
-                                                routers, mbs):
+    for n, pol, router, mb, split in grid:
         reason = None
         if memory is not None:
             reason = _memory_working_set_reason(memory, oracle, workload,
-                                                int(mb))
+                                                mb)
         if reason is not None:
             candidates.append(PlanCandidate(
-                replicas=int(n), policy=pol, router=router, metrics={},
+                replicas=n, policy=pol, router=router, metrics={},
                 meets_slo=False, objective=float("inf"),
-                max_batch=int(mb), infeasible_reason=reason))
+                max_batch=mb, split=split, infeasible_reason=reason))
             continue
+        if split is None:
+            cluster = ClusterSpec(replicas=n, router=router, memory=memory)
+        else:
+            cluster = ClusterSpec(
+                replicas=n, router=router, memory=memory,
+                disaggregation=DisaggSpec(
+                    prefill_replicas=split[0], decode_replicas=split[1],
+                    prefill_router=router, decode_router=router,
+                    prefill_max_batch=max_prefill, kv_network=kv_network))
         try:
             res = simulate_cluster(
-                workload, _policy(pol, int(mb), max_prefill), oracle,
-                cluster=ClusterSpec(replicas=int(n), router=router,
-                                    memory=memory),
-                network=NETWORKS[network])
+                workload, _policy(pol, mb, max_prefill), oracle,
+                cluster=cluster, network=NETWORKS[network])
         except KVBudgetError as exc:
             # budget validation caught something the static estimate
             # missed (e.g. per-request lengths from a replayed trace):
             # reject the candidate instead of failing the whole grid
             candidates.append(PlanCandidate(
-                replicas=int(n), policy=pol, router=router, metrics={},
+                replicas=n, policy=pol, router=router, metrics={},
                 meets_slo=False, objective=float("inf"),
-                max_batch=int(mb), infeasible_reason=str(exc)))
+                max_batch=mb, split=split, infeasible_reason=str(exc)))
             continue
-        metrics = dict(res.summary(),
-                       slo_attainment=res.slo_attainment(slo_latency_s))
+        if phase_slos:
+            att = res.phase_slo_attainment(ttft_slo_s=ttft_slo_s,
+                                           tpot_slo_s=tpot_slo_s,
+                                           e2e_slo_s=slo_latency_s)
+        else:
+            att = res.slo_attainment(slo_latency_s)
+        metrics = dict(res.summary(), slo_attainment=att)
+        if phase_slos:
+            metrics["goodput_rps"] = res.goodput(ttft_slo_s, tpot_slo_s,
+                                                 slo_latency_s)
         if objective not in metrics:
             raise ValueError(
                 f"unknown plan objective {objective!r} "
                 f"(available: {sorted(metrics)})")
         candidates.append(PlanCandidate(
-            replicas=int(n), policy=pol, router=router, metrics=metrics,
-            meets_slo=metrics["slo_attainment"] >= slo_target,
-            objective=float(metrics[objective]), max_batch=int(mb)))
+            replicas=n, policy=pol, router=router, metrics=metrics,
+            meets_slo=att >= slo_target,
+            objective=float(metrics[objective]), max_batch=mb,
+            split=split))
     candidates.sort(key=lambda c: (not c.meets_slo, c.objective))
     return PlanResult(profile_key=key, slo_latency_s=slo_latency_s,
                       slo_target=slo_target, objective=objective,
-                      candidates=candidates)
+                      candidates=candidates,
+                      ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
 
 
 def plan_from_spec(spec: PlanSpec) -> PlanResult:
     profile = load_profile(spec.profile, spec.profile_dir)
     return plan_capacity(
         profile, spec.workload, slo_latency_s=spec.slo_latency_s,
-        slo_target=spec.slo_target, replicas=spec.replicas,
+        slo_target=spec.slo_target,
+        ttft_slo_s=spec.ttft_slo_s, tpot_slo_s=spec.tpot_slo_s,
+        replicas=spec.replicas,
         policies=spec.policies, routers=spec.routers,
         max_batch=spec.max_batch, max_batches=spec.max_batches,
         max_prefill=spec.max_prefill,
+        prefill_decode_splits=spec.prefill_decode_splits,
+        kv_network=spec.kv_network,
         network=spec.network, objective=spec.objective,
         memory=spec.memory)
 
@@ -210,6 +276,8 @@ def run_plan_job(spec: PlanSpec) -> JobResult:
         "mode": "plan",
         "profile_key": plan.profile_key,
         "slo_latency_s": spec.slo_latency_s,
+        "ttft_slo_s": spec.ttft_slo_s,
+        "tpot_slo_s": spec.tpot_slo_s,
         "slo_target": spec.slo_target,
         "objective": spec.objective,
         "candidates": len(plan.candidates),

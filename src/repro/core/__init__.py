@@ -6,14 +6,15 @@ from repro.core.session import (BenchmarkSession, ConcurrentFollowerExecutor,
                                 Executor, Follower, InlineExecutor, JobHandle,
                                 execute_job, resolve_policy, run_stages)
 from repro.core.spec import (BenchmarkJobSpec, CalibrationSpec, ClusterSpec,
-                             MemorySpec, ModelRef, PlanSpec, SoftwareSpec,
-                             SweepSpec, load_jobs, spec_from_dict)
+                             DisaggSpec, MemorySpec, ModelRef, PlanSpec,
+                             SoftwareSpec, SweepSpec, load_jobs,
+                             spec_from_dict)
 
 __all__ = [
     "BenchmarkSession", "ConcurrentFollowerExecutor", "Executor", "Follower",
     "InlineExecutor", "JobHandle", "execute_job", "resolve_policy",
     "run_stages", "JobResult", "ScheduleInfo", "StageBreakdown", "Leader",
     "PerfDB", "ClusterScheduler", "evaluate_schedulers", "BenchmarkJobSpec",
-    "CalibrationSpec", "ClusterSpec", "MemorySpec", "ModelRef", "PlanSpec",
-    "SoftwareSpec", "SweepSpec", "load_jobs", "spec_from_dict",
+    "CalibrationSpec", "ClusterSpec", "DisaggSpec", "MemorySpec", "ModelRef",
+    "PlanSpec", "SoftwareSpec", "SweepSpec", "load_jobs", "spec_from_dict",
 ]

@@ -138,27 +138,42 @@ def fit_report(profile) -> str:
 
 def plan_table(plan) -> str:
     """Render a ``PlanResult`` grid: feasible configs first, best starred;
-    memory-rejected candidates print their rejection reason."""
+    memory-rejected candidates print their rejection reason.  The
+    ``split`` column shows disaggregated candidates as ``P+D``
+    (prefill+decode replicas), ``-`` for colocated."""
     best = plan.best
+    slos = []
+    if getattr(plan, "slo_latency_s", None) is not None:
+        slos.append(f"e2e ≤ {plan.slo_latency_s * 1e3:.0f}ms")
+    if getattr(plan, "ttft_slo_s", None) is not None:
+        slos.append(f"ttft ≤ {plan.ttft_slo_s * 1e3:.0f}ms")
+    if getattr(plan, "tpot_slo_s", None) is not None:
+        slos.append(f"tpot ≤ {plan.tpot_slo_s * 1e3:.1f}ms")
     header = (f"capacity plan vs {plan.profile_key}: "
-              f"SLO p(e2e ≤ {plan.slo_latency_s * 1e3:.0f}ms) ≥ "
+              f"SLO p({' ∧ '.join(slos)}) ≥ "
               f"{plan.slo_target:.0%}, minimize {plan.objective}")
-    cols = f"{'':2s}{'replicas':>9}{'policy':>12}{'router':>14}" \
-           f"{'slots':>7}{'thr rps':>9}{'p99 ms':>8}{'slo':>6}" \
-           f"{plan.objective:>16}"
+    cols = f"{'':2s}{'replicas':>9}{'split':>7}{'policy':>12}" \
+           f"{'router':>14}{'slots':>7}{'thr rps':>9}{'p99 ms':>8}" \
+           f"{'ttft99':>8}{'slo':>6}{plan.objective:>16}"
     lines = [header, cols]
     for c in plan.candidates:
         m = c.metrics
         slots = getattr(c, "max_batch", 0) or "-"
-        prefix = f"{'':2s}{c.replicas:>9}{c.policy:>12}{c.router:>14}" \
-                 f"{slots:>7}"
+        split = getattr(c, "split", None)
+        split_s = f"{split[0]}+{split[1]}" if split else "-"
+        prefix = f"{'':2s}{c.replicas:>9}{split_s:>7}{c.policy:>12}" \
+                 f"{c.router:>14}{slots:>7}"
         if getattr(c, "infeasible_reason", None):
             lines.append(f"m {prefix[2:]}  REJECTED: {c.infeasible_reason}")
             continue
         star = "* " if best is not None and c == best else \
             ("  " if c.meets_slo else "x ")
+        ttft99 = m.get("ttft_p99_s")
+        ttft_s = f"{ttft99 * 1e3:>8.1f}" if ttft99 is not None \
+            else f"{'-':>8}"
         lines.append(f"{star}{prefix[2:]}"
                      f"{m['throughput_rps']:>9.1f}{m['p99_s'] * 1e3:>8.1f}"
+                     f"{ttft_s}"
                      f"{m['slo_attainment']:>6.2f}{c.objective:>16.5f}")
     if best is None:
         lines.append("  (no configuration met the SLO target)")

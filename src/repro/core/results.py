@@ -21,7 +21,9 @@ class StageBreakdown:
 
     ``batch_wait`` is the policy-attributable slice of ``queue`` (waiting
     while capacity was free but the batch had not fired), so it is *not*
-    added again by ``total()``.
+    added again by ``total()``.  ``kv_transfer`` is the disaggregated
+    prefill→decode KV handoff (0 for colocated serving and for records
+    written before the stage existed).
     """
     preprocess: float = 0.0
     transmit: float = 0.0
@@ -29,10 +31,11 @@ class StageBreakdown:
     inference: float = 0.0
     postprocess: float = 0.0
     batch_wait: float = 0.0
+    kv_transfer: float = 0.0
 
     def total(self) -> float:
         return (self.preprocess + self.transmit + self.queue
-                + self.inference + self.postprocess)
+                + self.kv_transfer + self.inference + self.postprocess)
 
     def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)

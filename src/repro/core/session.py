@@ -120,17 +120,28 @@ def run_stages(spec: AnyJobSpec) -> JobResult:
                    else "roofline-model")
     if spec.slo_latency_s is not None:
         metrics["slo_attainment"] = res.slo_attainment(spec.slo_latency_s)
+    if spec.slo_ttft_s is not None or spec.slo_tpot_s is not None:
+        # joint phase attainment/goodput over every SLO the job declares
+        metrics["phase_slo_attainment"] = res.phase_slo_attainment(
+            ttft_slo_s=spec.slo_ttft_s, tpot_slo_s=spec.slo_tpot_s,
+            e2e_slo_s=spec.slo_latency_s)
+        metrics["goodput_rps"] = res.goodput(
+            spec.slo_ttft_s, spec.slo_tpot_s, spec.slo_latency_s)
+    cluster_info = {
+        "replicas": res.replicas,
+        "router": res.router,
+        "autoscale": spec.cluster.autoscale,
+        "replica_seconds": res.billed_replica_seconds(),
+        "per_replica_busy_s": list(res.per_replica_busy_s or []),
+    }
+    if res.pools is not None:
+        cluster_info["pools"] = dict(res.pools)
     return JobResult(
         spec=spec,
         metrics=metrics,
         stages=StageBreakdown.from_dict(res.stage_means()),
         cold_start_s=lat.cold_start(),
-        cluster={
-            "replicas": res.replicas,
-            "router": res.router,
-            "autoscale": spec.cluster.autoscale,
-            "per_replica_busy_s": list(res.per_replica_busy_s or []),
-        },
+        cluster=cluster_info,
         memory=res.memory,
         benchmark_wall_s=time.time() - t0)
 

@@ -37,6 +37,11 @@ class QueuedRequest:
     remaining: Optional[int] = None     # None → derive from the request
     recompute_tokens: int = 0           # context to re-prefill on rejoin
     preemptions: int = 0
+    # ---- disaggregated serving (prefill→decode migration) -----------------
+    # the request was prefilled on the prefill pool and its KV transferred:
+    # the decode engine admits it with KV already resident (no prefill
+    # compute) unless a later preemption forces a recompute
+    migrated: bool = False
 
 
 class BatchPolicy:

@@ -19,11 +19,62 @@ from repro.serving.batching import (BatchPolicy, ContinuousBatcher,
                                     QueuedRequest)
 from repro.serving.latency_model import LatencyModel, NetworkModel, NETWORKS
 from repro.serving.memory import (KVBudgetError, KVCacheManager, MemorySpec,
-                                  ResolvedMemory, resolve_memory)
+                                  ResolvedMemory, oracle_kv_bytes_per_token,
+                                  resolve_memory)
 from repro.serving.simulator import (EPS, PRE_PROCESS_S, ReplicaEngine,
-                                     RequestTrace, SimResult)
+                                     RequestTrace, SimResult,
+                                     clamped_output_tokens)
 from repro.serving.workload import CLOSED, TRACE, Request, WorkloadSpec, \
     generate
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggSpec:
+    """Disaggregated prefill/decode serving (DistServe/Splitwise-style).
+
+    Requests land on a *prefill pool* that runs chunked prefill only and
+    emits the first token; the KV cache then migrates to a *decode pool*
+    over ``kv_network`` (bytes = ``kv_bytes_per_token × prompt_tokens``)
+    and the request joins a decode engine's continuous batch with its KV
+    already resident.  Each pool has its own replica count, router, and
+    batching knobs, so prefill bursts can no longer stall decode
+    iterations (TPOT) and long prompts stop queueing behind decode
+    (TTFT).
+    """
+    prefill_replicas: int = 1
+    decode_replicas: int = 1
+    prefill_router: str = "least-loaded"
+    decode_router: str = "least-loaded"
+    prefill_chunk_tokens: int = 512  # chunked-prefill granularity
+                                     # (0 → whole-prompt prefill)
+    prefill_max_batch: int = 4       # concurrent prefills per engine
+    decode_max_batch: int = 0        # decode slots; 0 → the job policy's
+                                     # max_batch
+    kv_network: str = "infiniband"   # NetworkModel clocking the handoff
+    kv_bytes_per_token: float = 0.0  # 0 → derive from the memory spec /
+                                     # model config (0 if underivable:
+                                     # the handoff costs one RTT)
+
+    def __post_init__(self):
+        if self.prefill_replicas < 1 or self.decode_replicas < 1:
+            raise ValueError("DisaggSpec needs at least one replica in "
+                             "each pool")
+        if self.prefill_max_batch < 1:
+            raise ValueError("DisaggSpec.prefill_max_batch must be >= 1")
+        if self.prefill_chunk_tokens < 0:
+            raise ValueError("DisaggSpec.prefill_chunk_tokens must be "
+                             ">= 0 (0 = whole-prompt prefill)")
+        if self.kv_network not in NETWORKS:
+            raise ValueError(f"unknown kv_network {self.kv_network!r} "
+                             f"(known: {sorted(NETWORKS)})")
+
+    @property
+    def total_replicas(self) -> int:
+        return self.prefill_replicas + self.decode_replicas
+
+    @classmethod
+    def from_dict(cls, d) -> "DisaggSpec":
+        return cls(**dict(d))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +91,8 @@ class ClusterSpec:
     spawn_delay_s: float = 0.5      # cold-start before a new replica serves
     memory: Optional[MemorySpec] = None   # per-replica KV-cache accounting
                                     # (None → memory unmodeled, legacy)
+    disaggregation: Optional[DisaggSpec] = None   # split prefill/decode
+                                    # pools (None → colocated, legacy)
 
     def __post_init__(self):
         if self.replicas < 1 or self.min_replicas < 1:
@@ -53,6 +106,13 @@ class ClusterSpec:
         if isinstance(self.memory, dict):
             object.__setattr__(self, "memory",
                                MemorySpec.from_dict(self.memory))
+        if isinstance(self.disaggregation, dict):
+            object.__setattr__(self, "disaggregation",
+                               DisaggSpec.from_dict(self.disaggregation))
+        if self.disaggregation is not None and self.autoscale:
+            raise ValueError("disaggregated pools are fixed-size: "
+                             "autoscale=True is not supported with "
+                             "ClusterSpec.disaggregation")
 
     @classmethod
     def from_dict(cls, d) -> "ClusterSpec":
@@ -90,13 +150,50 @@ class LeastLoadedRouter(Router):
                    key=lambda i: (engines[i].load(now), i))
 
 
+_MASK64 = (1 << 64) - 1
+
+
+def _rendezvous_weight(session_id: int, replica_id: int) -> int:
+    """Deterministic splitmix64-style mix of (session, replica) — the
+    highest-random-weight (rendezvous) hash.  Seed-independent, so runs
+    are reproducible across processes."""
+    x = (session_id * 0x9E3779B97F4A7C15
+         + replica_id * 0xBF58476D1CE4E5B9 + 0x94D049BB133111EB) & _MASK64
+    x ^= x >> 30
+    x = (x * 0xBF58476D1CE4E5B9) & _MASK64
+    x ^= x >> 27
+    x = (x * 0x94D049BB133111EB) & _MASK64
+    return x ^ (x >> 31)
+
+
 class SessionAffinityRouter(Router):
-    """Sticky sessions: a session always lands on the same replica (while
-    the live replica set is stable)."""
+    """Sticky sessions bound to stable ``replica_id``s.
+
+    A session stays on its assigned replica for as long as that replica
+    is live; only sessions whose replica was retired are remapped
+    (rendezvous hashing over the currently-live set picks the new home).
+    The old implementation hashed ``session_id % len(engines)`` over the
+    *filtered* ready list, so every autoscaler add/retire — or a replica
+    merely cold-starting — remapped every session, destroying stickiness
+    and the prefix-cache hit rate.
+    """
     name = "affinity"
 
+    def __init__(self):
+        self._home: Dict[int, int] = {}     # session_id → replica_id
+
     def route(self, request, engines, now):
-        return request.session_id % len(engines)
+        sid = request.session_id
+        home = self._home.get(sid)
+        if home is not None:
+            for i, e in enumerate(engines):
+                if e.replica_id == home:
+                    return i
+        idx = max(range(len(engines)),
+                  key=lambda i: _rendezvous_weight(sid,
+                                                   engines[i].replica_id))
+        self._home[sid] = engines[idx].replica_id
+        return idx
 
 
 def make_router(name: str) -> Router:
@@ -124,8 +221,8 @@ class Autoscaler:
         self.latency = latency
         # factory so spawned replicas get their own KV-cache manager
         self.make_engine = make_engine or (
-            lambda i, spawn_s: ReplicaEngine(i, policy, latency,
-                                             spawn_s=spawn_s))
+            lambda i, spawn_s=0.0, created_s=0.0: ReplicaEngine(
+                i, policy, latency, spawn_s=spawn_s, created_s=created_s))
 
     def step(self, engines: List[ReplicaEngine], now: float) -> None:
         live = [e for e in engines if not e.retired]
@@ -134,12 +231,14 @@ class Autoscaler:
         inflight = sum(e.load(now) for e in live) / max(n, 1)
         if queued > self.spec.scale_up_load and n < self.spec.max_replicas:
             engines.append(self.make_engine(
-                len(engines), now + self.spec.spawn_delay_s))
+                len(engines), now + self.spec.spawn_delay_s, now))
         elif inflight < self.spec.scale_down_load \
                 and n > self.spec.min_replicas:
             for e in reversed(live):
                 if e.idle(now):
                     e.retired = True
+                    e.retired_s = now   # billing: the replica-second
+                    # integral stops here, not at the end of the run
                     break
 
 
@@ -178,14 +277,26 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
                      cluster: ClusterSpec = ClusterSpec(),
                      network: NetworkModel = NETWORKS["lan"]) -> SimResult:
     """Drive a cluster of replicas over a workload; returns a SimResult
-    whose utilization/energy/cost account for the peak replica count.
+    whose utilization accounts for the peak replica count and whose
+    energy/cost bill the integrated live replica-seconds.
 
     ``duration_s`` is ``max(workload window, last completion)`` — a sparse
     open-loop workload no longer reports inflated throughput, and overload
     (completions past the window) stretches the denominator instead of
     shrinking it.  Trace replay has no declared window, so its duration is
     the makespan.
+
+    With ``cluster.disaggregation`` set, arrivals land on the prefill
+    pool, completions there (= first token) trigger a KV handoff over the
+    disaggregation's ``kv_network``, and the decode pool finishes the
+    generation with the migrated KV already resident.
     """
+    disagg = cluster.disaggregation
+    if disagg is not None and not isinstance(policy, ContinuousBatcher):
+        raise ValueError(
+            "disaggregated serving needs the continuous batcher "
+            f"(got {policy.name!r}): request-level policies have no "
+            "decode loop to migrate into")
     requests = generate(workload)
     closed_loop = workload.kind == CLOSED
     traces: Dict[int, RequestTrace] = {}
@@ -210,14 +321,49 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
     max_len = resolved.max_model_len if resolved is not None \
         else getattr(getattr(latency, "cfg", None), "max_seq_len", 0)
 
-    def make_engine(i: int, spawn_s: float = 0.0) -> ReplicaEngine:
-        kv = KVCacheManager(cluster.memory, resolved) \
+    def _kv():
+        return KVCacheManager(cluster.memory, resolved) \
             if resolved is not None else None
-        return ReplicaEngine(i, policy, latency, spawn_s=spawn_s,
-                             kv=kv, max_model_len=max_len)
 
-    engines = [make_engine(i) for i in range(max(cluster.replicas, 1))]
-    router = make_router(cluster.router)
+    def make_engine(i: int, spawn_s: float = 0.0,
+                    created_s: float = 0.0) -> ReplicaEngine:
+        return ReplicaEngine(i, policy, latency, spawn_s=spawn_s,
+                             kv=_kv(), max_model_len=max_len,
+                             created_s=created_s)
+
+    migrations: List[Tuple[float, int, Request]] = []  # (kv_ready, id, r)
+    prefill_engines: List[ReplicaEngine] = []
+    decode_engines: List[ReplicaEngine] = []
+    decode_router = kv_net = None
+    kv_bpt = 0.0
+    if disagg is not None:
+        prefill_policy = ContinuousBatcher(
+            max_batch=disagg.prefill_max_batch,
+            max_prefill=disagg.prefill_max_batch)
+        decode_policy = policy if disagg.decode_max_batch <= 0 else \
+            dataclasses.replace(policy, max_batch=disagg.decode_max_batch)
+        prefill_engines = [
+            ReplicaEngine(i, prefill_policy, latency, kv=_kv(),
+                          max_model_len=max_len, role="prefill",
+                          chunk_tokens=disagg.prefill_chunk_tokens)
+            for i in range(disagg.prefill_replicas)]
+        decode_engines = [
+            ReplicaEngine(disagg.prefill_replicas + i, decode_policy,
+                          latency, kv=_kv(), max_model_len=max_len,
+                          role="decode")
+            for i in range(disagg.decode_replicas)]
+        engines = prefill_engines + decode_engines
+        router = make_router(disagg.prefill_router)
+        decode_router = make_router(disagg.decode_router)
+        kv_net = NETWORKS[disagg.kv_network]
+        kv_bpt = disagg.kv_bytes_per_token
+        if kv_bpt <= 0 and resolved is not None:
+            kv_bpt = resolved.kv_bytes_per_token
+        if kv_bpt <= 0:
+            kv_bpt = oracle_kv_bytes_per_token(latency)
+    else:
+        engines = [make_engine(i) for i in range(max(cluster.replicas, 1))]
+        router = make_router(cluster.router)
     scaler = Autoscaler(cluster, policy, latency, make_engine) \
         if cluster.autoscale else None
     next_scale = cluster.scale_interval_s
@@ -228,6 +374,8 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         candidates = []
         if arrivals:
             candidates.append(arrivals[0][0])
+        if migrations:
+            candidates.append(migrations[0][0])
         for e in engines:
             t = e.next_action_s(now)
             if t is not None:
@@ -240,12 +388,23 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
 
         while arrivals and arrivals[0][0] <= now + EPS:
             t_arr, _, r = heapq.heappop(arrivals)
-            live = [e for e in engines if not e.retired]
+            pool = prefill_engines if disagg is not None else engines
+            live = [e for e in pool if not e.retired]
             # prefer replicas already past cold start; a still-spawning
             # replica only takes traffic if no warm replica exists
             ready = [e for e in live if e.spawn_s <= now + EPS] or live
             ready[router.route(r, ready, now)].enqueue(
                 QueuedRequest(request=r, enqueue_s=t_arr))
+
+        # KV handoffs whose transfer finished join the decode pool with
+        # their cache already resident (first token was already emitted)
+        while migrations and migrations[0][0] <= now + EPS:
+            t_ready, _, r = heapq.heappop(migrations)
+            out = clamped_output_tokens(r, max_len)
+            decode_engines[decode_router.route(r, decode_engines,
+                                               now)].enqueue(
+                QueuedRequest(request=r, enqueue_s=t_ready,
+                              remaining=out - 1, migrated=True))
 
         if scaler is not None and now + EPS >= next_scale:
             scaler.step(engines, now)
@@ -255,6 +414,18 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
 
         for e in engines:
             for done_s, r in e.act(now, traces):
+                if e.role == "prefill" \
+                        and clamped_output_tokens(r, max_len) > 1:
+                    # first token out — clock the KV handoff and hand the
+                    # request to the decode pool (single-token requests
+                    # are complete after prefill and never migrate)
+                    tr = traces[r.req_id]
+                    transfer = kv_net.transmit(kv_bpt * r.prompt_tokens)
+                    tr.t_kv_transfer = transfer
+                    tr.done_s = 0.0     # decode owns final completion
+                    heapq.heappush(migrations,
+                                   (done_s + transfer, r.req_id, r))
+                    continue
                 if closed_loop and done_s < workload.duration_s:
                     # the client observes the response and issues its next
                     # request, keeping its loop at concurrency 1
@@ -266,6 +437,26 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
     last_done = max((t.done_s for t in done), default=0.0)
     window = 0.0 if workload.kind == TRACE else workload.duration_s
     duration = max(window, last_done)
+    # live replica-seconds (spawn→retire spans): what energy/cost bill —
+    # an autoscaled cluster no longer pays its peak count for the full run
+    replica_seconds = sum(
+        max((e.retired_s if e.retired_s is not None else duration)
+            - e.created_s, 0.0)
+        for e in engines)
+    pools = None
+    if disagg is not None:
+        transfers = [t.t_kv_transfer for t in done if t.t_kv_transfer > 0]
+        pools = {
+            "prefill_replicas": disagg.prefill_replicas,
+            "decode_replicas": disagg.decode_replicas,
+            "prefill_busy_s": sum(e.busy_s for e in prefill_engines),
+            "decode_busy_s": sum(e.busy_s for e in decode_engines),
+            "kv_network": disagg.kv_network,
+            "kv_bytes_per_token": kv_bpt,
+            "migrated_requests": len(transfers),
+            "mean_kv_transfer_s": (sum(transfers) / len(transfers)
+                                   if transfers else 0.0),
+        }
     memory = None
     if resolved is not None:
         per = [e.kv.stats(duration) for e in engines]
@@ -296,6 +487,8 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         hw=latency.hw,
         chips=latency.chips,
         replicas=peak,
-        router=cluster.router,
+        router="disaggregated" if disagg is not None else cluster.router,
         per_replica_busy_s=[e.busy_s for e in engines],
-        memory=memory)
+        memory=memory,
+        replica_seconds=replica_seconds,
+        pools=pools)

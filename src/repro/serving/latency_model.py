@@ -248,4 +248,8 @@ NETWORKS: Dict[str, NetworkModel] = {
     "lan": NetworkModel("lan", 10e9, 0.0002),
     "wifi": NetworkModel("wifi", 100e6, 0.004),
     "4g": NetworkModel("4g", 20e6, 0.045),
+    # datacenter interconnects for the disaggregated prefill→decode
+    # KV-cache handoff (bytes = kv_bytes_per_token × prompt_tokens)
+    "infiniband": NetworkModel("infiniband", 400e9, 5e-6),
+    "nvlink": NetworkModel("nvlink", 7.2e12, 2e-6),
 }

@@ -79,6 +79,17 @@ class MemorySpec:
         return cls(**dict(d))
 
 
+def oracle_kv_bytes_per_token(oracle) -> float:
+    """Per-token KV footprint of a latency oracle, or 0.0 when the oracle
+    carries no model config (fitted calibration profiles).  Shared by the
+    KV budget resolution here and the disaggregated prefill→decode
+    transfer sizing in ``repro.serving.cluster``."""
+    fn = getattr(oracle, "kv_bytes_per_token", None)
+    if fn is None:
+        return 0.0
+    return float(fn())
+
+
 @dataclasses.dataclass(frozen=True)
 class ResolvedMemory:
     """A MemorySpec grounded against one oracle: concrete block budget."""
@@ -93,16 +104,15 @@ def resolve_memory(spec: MemorySpec, oracle) -> ResolvedMemory:
     cfg = getattr(oracle, "cfg", None)
     kv_b = spec.kv_bytes_per_token
     if kv_b <= 0:
-        if cfg is not None:
-            from repro.analysis.memory_model import kv_bytes_per_token
-            kv_b = kv_bytes_per_token(cfg)
-        elif spec.num_blocks > 0:
-            kv_b = 0.0      # block count given directly; bytes are cosmetic
-        else:
-            raise ValueError(
-                "MemorySpec.kv_bytes_per_token must be set explicitly for "
-                "latency oracles without a model config (e.g. fitted "
-                "calibration profiles)")
+        kv_b = oracle_kv_bytes_per_token(oracle)
+        if kv_b <= 0:
+            if spec.num_blocks > 0:
+                kv_b = 0.0  # block count given directly; bytes cosmetic
+            else:
+                raise ValueError(
+                    "MemorySpec.kv_bytes_per_token must be set explicitly "
+                    "for latency oracles without a model config (e.g. "
+                    "fitted calibration profiles)")
     max_len = spec.max_model_len or getattr(cfg, "max_seq_len", 0) \
         or DEFAULT_MAX_MODEL_LEN
     if spec.num_blocks > 0:

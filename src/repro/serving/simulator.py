@@ -43,9 +43,14 @@ class RequestTrace:
                                # had not been reached
     t_inference: float = 0.0
     t_postprocess: float = 0.0
+    t_kv_transfer: float = 0.0      # disaggregated serving: prefill→decode
+                                    # KV-cache handoff over the interconnect
     batch_size: int = 1
     replica: int = 0
     done_s: float = 0.0
+    first_token_s: float = 0.0      # absolute sim time of the first token
+                                    # (end of prefill); 0 = none emitted
+    tokens_out: int = 0             # tokens actually generated (post-clamp)
     preemptions: int = 0            # KV-pressure evict/recompute cycles
     cached_prompt_tokens: int = 0   # prompt tokens served from prefix cache
 
@@ -53,7 +58,25 @@ class RequestTrace:
     def e2e(self) -> float:
         # t_batch_wait is a sub-component of t_queue, not an extra stage
         return (self.t_preprocess + self.t_transmit + self.t_queue
-                + self.t_inference + self.t_postprocess)
+                + self.t_kv_transfer + self.t_inference + self.t_postprocess)
+
+    # ---- phase latencies (the TTFT/TPOT language of LLM SLOs) ------------
+    @property
+    def t_first_token(self) -> float:
+        """TTFT: request arrival → first generated token (0 if none)."""
+        if self.first_token_s <= 0.0:
+            return 0.0
+        return self.first_token_s - self.request.arrival_s
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first (0 when ≤ 1 token).
+        Preemption stalls and KV-transfer gaps between tokens count — the
+        client experiences them as inter-token latency."""
+        if self.tokens_out <= 1 or self.first_token_s <= 0.0:
+            return 0.0
+        last = self.done_s - self.t_postprocess
+        return max(last - self.first_token_s, 0.0) / (self.tokens_out - 1)
 
 
 @dataclasses.dataclass
@@ -68,6 +91,11 @@ class SimResult:
     per_replica_busy_s: Optional[List[float]] = None
     memory: Optional[Dict[str, object]] = None   # KV-cache accounting
                                         # (None when memory is unmodeled)
+    replica_seconds: float = 0.0        # ∫ live replicas dt over the run
+                                        # (0 → bill replicas × duration)
+    pools: Optional[Dict[str, object]] = None    # disaggregated prefill/
+                                        # decode pool provenance (None when
+                                        # colocated)
 
     # ---- aggregate metrics (the paper's metric collector) ----------------
     def latencies(self) -> np.ndarray:
@@ -89,6 +117,62 @@ class SimResult:
         from repro.core.analysis import slo_attainment
         return slo_attainment(self.latencies(), slo_latency_s)
 
+    # ---- phase metrics (TTFT / TPOT / goodput) ---------------------------
+    def ttfts(self) -> np.ndarray:
+        """Time-to-first-token of every request that emitted one."""
+        return np.array([t.t_first_token for t in self.traces
+                         if t.first_token_s > 0.0])
+
+    def tpots(self) -> np.ndarray:
+        """Per-token decode time of every request with ≥ 2 tokens
+        (single-token requests have no defined inter-token latency)."""
+        return np.array([t.tpot for t in self.traces if t.tokens_out > 1])
+
+    def ttft(self, p: float = 50.0) -> float:
+        """TTFT percentile (median by default)."""
+        v = self.ttfts()
+        return float(np.percentile(v, p)) if len(v) else 0.0
+
+    def tpot(self, p: float = 50.0) -> float:
+        """TPOT percentile (median by default)."""
+        v = self.tpots()
+        return float(np.percentile(v, p)) if len(v) else 0.0
+
+    def _meets_phase_slos(self, t: RequestTrace,
+                          ttft_slo_s: Optional[float],
+                          tpot_slo_s: Optional[float],
+                          e2e_slo_s: Optional[float]) -> bool:
+        if ttft_slo_s is not None and t.t_first_token > ttft_slo_s:
+            return False
+        # single-token requests trivially meet any TPOT SLO (no decode)
+        if tpot_slo_s is not None and t.tokens_out > 1 \
+                and t.tpot > tpot_slo_s:
+            return False
+        if e2e_slo_s is not None and t.e2e > e2e_slo_s:
+            return False
+        return True
+
+    def goodput(self, ttft_slo_s: Optional[float] = None,
+                tpot_slo_s: Optional[float] = None,
+                e2e_slo_s: Optional[float] = None) -> float:
+        """Requests/s meeting *every* provided SLO (TTFT and TPOT and,
+        optionally, e2e) — the rate real LLM deployments are judged by."""
+        if not self.duration_s:
+            return 0.0
+        n = sum(self._meets_phase_slos(t, ttft_slo_s, tpot_slo_s, e2e_slo_s)
+                for t in self.traces)
+        return n / self.duration_s
+
+    def phase_slo_attainment(self, ttft_slo_s: Optional[float] = None,
+                             tpot_slo_s: Optional[float] = None,
+                             e2e_slo_s: Optional[float] = None) -> float:
+        """Fraction of served requests meeting every provided SLO."""
+        if not self.traces:
+            return 0.0
+        n = sum(self._meets_phase_slos(t, ttft_slo_s, tpot_slo_s, e2e_slo_s)
+                for t in self.traces)
+        return n / len(self.traces)
+
     def cdf(self, points: int = 50):
         lat = np.sort(self.latencies())
         if not len(lat):
@@ -96,17 +180,28 @@ class SimResult:
         qs = np.linspace(0, 1, points)
         return list(np.quantile(lat, qs)), list(qs)
 
+    def billed_replica_seconds(self) -> float:
+        """Replica-seconds energy/cost are billed over: the integrated
+        live-replica span when the event loop measured it, else the static
+        ``replicas × duration`` (identical for fixed-size clusters).  An
+        autoscaled cluster is no longer charged its *peak* replica count
+        for the whole run."""
+        if self.replica_seconds > 0.0:
+            return self.replica_seconds
+        return self.duration_s * max(self.replicas, 1)
+
     def energy_joules(self) -> float:
-        return hw_lib.energy_joules(self.hw, self.duration_s,
-                                    self.utilization()) \
-            * self.chips * max(self.replicas, 1)
+        rs = self.billed_replica_seconds()
+        util = min(self.busy_s / rs, 1.0) if rs else 0.0
+        return hw_lib.energy_joules(self.hw, rs, util) * self.chips
 
     def co2_kg(self) -> float:
         return hw_lib.co2_kg(self.energy_joules())
 
     def cost_usd(self) -> float:
-        return hw_lib.cloud_cost_usd(self.hw.name, self.duration_s) \
-            * self.chips * max(self.replicas, 1)
+        return hw_lib.cloud_cost_usd(self.hw.name,
+                                     self.billed_replica_seconds()) \
+            * self.chips
 
     def cost_per_1k_requests(self) -> float:
         n = len(self.traces)
@@ -121,6 +216,8 @@ class SimResult:
             "queue": float(np.mean([t.t_queue for t in self.traces])),
             "batch_wait": float(np.mean([t.t_batch_wait
                                          for t in self.traces])),
+            "kv_transfer": float(np.mean([t.t_kv_transfer
+                                          for t in self.traces])),
             "inference": float(np.mean([t.t_inference for t in self.traces])),
             "postprocess": float(np.mean([t.t_postprocess
                                           for t in self.traces])),
@@ -134,13 +231,22 @@ class SimResult:
             "p95_s": self.percentile(95),
             "p99_s": self.percentile(99),
             "mean_s": float(np.mean(self.latencies())) if self.traces else 0.0,
+            "ttft_p50_s": self.ttft(50),
+            "ttft_p99_s": self.ttft(99),
+            "tpot_p50_s": self.tpot(50),
+            "tpot_p99_s": self.tpot(99),
             "utilization": self.utilization(),
             "replicas": self.replicas,
+            "replica_seconds": self.billed_replica_seconds(),
             "energy_j": self.energy_joules(),
             "co2_kg": self.co2_kg(),
             "cost_usd": self.cost_usd(),
             "cost_per_1k_req": self.cost_per_1k_requests(),
         }
+        if self.pools is not None:
+            s["prefill_replicas"] = self.pools["prefill_replicas"]
+            s["decode_replicas"] = self.pools["decode_replicas"]
+            s["mean_kv_transfer_s"] = self.pools["mean_kv_transfer_s"]
         if self.memory is not None:
             s["prefix_hit_rate"] = self.memory["prefix_hit_rate"]
             s["preemptions"] = self.memory["preemptions"]
@@ -156,6 +262,19 @@ class _ActiveRequest:
     remaining: int          # tokens still to produce (prefill yields one)
     context: int            # KV length so far
     join_s: float
+    prefill_left: int = 0   # prompt tokens still to chunk-prefill (0 when
+                            # the prompt was prefilled whole at join)
+    chunk: int = 0          # tokens being prefilled this iteration
+
+
+def clamped_output_tokens(request: Request, max_model_len: int) -> int:
+    """Decode tokens owed, bounded by the model's context limit so
+    slot/KV accounting is always finite (``output_tokens_max=None``
+    workloads carry an unbounded-generation sentinel)."""
+    out = request.output_tokens
+    if max_model_len:
+        out = min(out, max_model_len - request.prompt_tokens)
+    return max(out, 1)
 
 
 class ReplicaEngine:
@@ -171,7 +290,8 @@ class ReplicaEngine:
     def __init__(self, replica_id: int, policy: BatchPolicy,
                  latency: LatencyModel, spawn_s: float = 0.0,
                  kv: Optional[KVCacheManager] = None,
-                 max_model_len: int = 0):
+                 max_model_len: int = 0, role: str = "both",
+                 chunk_tokens: int = 0, created_s: float = 0.0):
         self.replica_id = replica_id
         self.policy = policy
         self.latency = latency
@@ -179,6 +299,14 @@ class ReplicaEngine:
         self.spawn_s = spawn_s
         self.kv = kv                        # None → memory unmodeled
         self.max_model_len = max_model_len  # 0 → unbounded decode
+        # disaggregated serving: a "prefill" engine runs chunked prefill
+        # only and completes each request at its first token (the cluster
+        # loop migrates it to the decode pool); "decode"/"both" engines
+        # run the full continuous loop
+        self.role = role
+        self.chunk_tokens = chunk_tokens    # 0 → whole-prompt prefill
+        self.created_s = created_s          # provisioning time (billing)
+        self.retired_s: Optional[float] = None
         self.queue: List[QueuedRequest] = []
         self.server_free_at = spawn_s
         self.busy_s = 0.0
@@ -282,6 +410,9 @@ class ReplicaEngine:
             self.served += bsz
             if self.kv is not None:
                 self.kv.charge_span(kv_blocks, start, self.server_free_at)
+            # the batch emits its first tokens once the (padded) prefill
+            # completes; decode steps follow until the batch's max length
+            first_token = start + self.latency.prefill_latency(bsz, prompt)
             for q in batch:
                 tr = traces[q.request.req_id]
                 tr.replica = self.replica_id
@@ -291,19 +422,16 @@ class ReplicaEngine:
                 tr.t_inference = infer_s
                 tr.t_postprocess = POST_PROCESS_S
                 tr.batch_size = bsz
+                tr.first_token_s = min(first_token, self.server_free_at)
+                tr.tokens_out = clamped_output_tokens(q.request,
+                                                      self.max_model_len)
                 tr.done_s = self.server_free_at + POST_PROCESS_S
                 completions.append((tr.done_s, q.request))
         return completions
 
     # ---- continuous (token-level) engine ---------------------------------
     def _clamped_output(self, request: Request) -> int:
-        """Decode tokens owed, bounded by the model's context limit so
-        slot/KV accounting is always finite (``output_tokens_max=None``
-        workloads carry an unbounded-generation sentinel)."""
-        out = request.output_tokens
-        if self.max_model_len:
-            out = min(out, self.max_model_len - request.prompt_tokens)
-        return max(out, 1)
+        return clamped_output_tokens(request, self.max_model_len)
 
     def _preempt(self, victim: _ActiveRequest, now: float, traces) -> None:
         """Evict a running request under KV pressure (recompute policy):
@@ -362,13 +490,32 @@ class ReplicaEngine:
             was_full = len(self.active) >= cap
             still: List[_ActiveRequest] = []
             for a in self.active:
+                if a.chunk > 0:
+                    # chunked prefill advanced; no token until the final
+                    # chunk's iteration (which falls through below)
+                    a.prefill_left -= a.chunk
+                    a.chunk = 0
+                    if a.prefill_left > 0:
+                        still.append(a)
+                        continue
                 a.remaining -= 1
                 a.context += 1
+                tr = traces[a.qreq.request.req_id]
+                tr.tokens_out += 1
+                if tr.first_token_s <= 0.0:
+                    tr.first_token_s = end
                 if a.remaining <= 0:
-                    tr = traces[a.qreq.request.req_id]
                     tr.t_inference += end - a.join_s
-                    tr.t_postprocess = POST_PROCESS_S
-                    tr.done_s = end + POST_PROCESS_S
+                    if self.role == "prefill" and clamped_output_tokens(
+                            a.qreq.request, self.max_model_len) > 1:
+                        # hand-off point (the cluster loop migrates this
+                        # request): the decode pool owns the final done/
+                        # postprocess accounting.  Single-token requests
+                        # finish here and pay postprocess like everyone
+                        tr.done_s = end
+                    else:
+                        tr.t_postprocess = POST_PROCESS_S
+                        tr.done_s = end + POST_PROCESS_S
                     completions.append((tr.done_s, a.qreq.request))
                     self.served += 1
                     if self.kv is not None:
@@ -383,20 +530,34 @@ class ReplicaEngine:
         if self.iter_end is None and (self.queue or self.active):
             start = max(now, self.spawn_s)
             joined: List[_ActiveRequest] = []
+            decode_joins: List[_ActiveRequest] = []
             prefill_lens: List[int] = []
+            # max_prefill caps prefill admissions per boundary; migrated
+            # (KV-resident) joins need no prefill compute, so they only
+            # count against the decode-slot cap
             while (self.queue and len(self.active) + len(joined) < cap
-                   and len(joined) < self.policy.max_prefill):
+                   and len(joined) - len(decode_joins)
+                   < self.policy.max_prefill):
                 q = self.queue[0]
                 # a preempted request re-prefills its full saved context
                 context0 = q.recompute_tokens or q.request.prompt_tokens
-                remaining = q.remaining if q.remaining is not None \
-                    else self._clamped_output(q.request)
+                if self.role == "prefill":
+                    remaining = 1   # prefill emits exactly the first token
+                elif q.remaining is not None:
+                    remaining = q.remaining
+                else:
+                    remaining = self._clamped_output(q.request)
                 cached = 0
                 if self.kv is not None:
+                    # migrated KV arrives as private blocks — keep it out
+                    # of the prefix cache (its prefix was already shared
+                    # on the prefill pool)
                     got = self.kv.allocate(
                         q.request.req_id, context0, now,
-                        session_id=q.request.session_id,
-                        prefix_tokens=q.request.prefix_tokens)
+                        session_id=None if q.migrated
+                        else q.request.session_id,
+                        prefix_tokens=0 if q.migrated
+                        else q.request.prefix_tokens)
                     if got is None:
                         break           # no KV headroom: stays queued
                     cached = got
@@ -410,15 +571,33 @@ class ReplicaEngine:
                     0.0, start - max(q.enqueue_s, self._slot_free_s))
                 tr.cached_prompt_tokens = max(tr.cached_prompt_tokens,
                                               cached)
-                # prefix-cache hits skip those tokens' prefill compute
-                prefill_lens.append(max(context0 - cached, 1))
-                joined.append(_ActiveRequest(
-                    qreq=q, remaining=remaining,
-                    context=context0, join_s=start))
+                a = _ActiveRequest(qreq=q, remaining=remaining,
+                                   context=context0, join_s=start)
+                if q.migrated and not q.recompute_tokens:
+                    # KV already resident (transferred): no prefill
+                    # compute; it takes a decode step this very iteration
+                    decode_joins.append(a)
+                else:
+                    # prefix-cache hits skip those tokens' prefill compute
+                    need = max(context0 - cached, 1)
+                    if self.chunk_tokens and need > self.chunk_tokens:
+                        a.prefill_left = need
+                        a.chunk = min(self.chunk_tokens, need)
+                        prefill_lens.append(a.chunk)
+                    else:
+                        prefill_lens.append(need)
+                joined.append(a)
+            # in-flight chunked prefills schedule their next chunk
+            for a in self.active:
+                if a.prefill_left > 0:
+                    a.chunk = min(self.chunk_tokens, a.prefill_left)
+                    prefill_lens.append(a.chunk)
             if joined or self.active:
-                n_decode = len(self.active)
-                max_ctx = max((a.context for a in self.active), default=0)
-                n_prefill = len(joined)
+                decoders = [a for a in self.active if a.prefill_left <= 0] \
+                    + decode_joins
+                n_decode = len(decoders)
+                max_ctx = max((a.context for a in decoders), default=0)
+                n_prefill = len(prefill_lens)
                 max_prompt = max(prefill_lens, default=0)
                 t_iter = self.latency.iteration_latency(
                     n_prefill, max_prompt, n_decode, max_ctx)

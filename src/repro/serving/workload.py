@@ -54,6 +54,10 @@ class WorkloadSpec:
     rate: float = 30.0                  # requests/s (poisson & uniform)
     duration_s: float = 60.0
     prompt_tokens: int = 128
+    prompt_tokens_max: int = 0          # > prompt_tokens ⇒ per-request
+                                        # uniform sample in [min, max] —
+                                        # mixed short/long-prefill loads
+                                        # (disaggregation's home turf)
     prefix_tokens: int = 0              # leading prompt tokens identical
                                         # within a session (shared-prefix
                                         # chat; enables prefix-cache reuse)
@@ -163,13 +167,20 @@ def generate(spec: WorkloadSpec) -> List[Request]:
                             size=n)
     else:
         outs = np.full(n, spec.output_tokens, dtype=int)
-    prefix = min(max(spec.prefix_tokens, 0), spec.prompt_tokens)
+    # mixed prompt lengths only sample the rng when enabled, so legacy
+    # workloads keep byte-identical request streams for a given seed
+    if spec.prompt_tokens_max > spec.prompt_tokens:
+        prompts = rng.integers(spec.prompt_tokens,
+                               spec.prompt_tokens_max + 1, size=n)
+    else:
+        prompts = np.full(n, spec.prompt_tokens, dtype=int)
+    prefix0 = max(spec.prefix_tokens, 0)
     return [
         Request(req_id=i, arrival_s=float(t),
-                prompt_tokens=spec.prompt_tokens,
+                prompt_tokens=int(prompts[i]),
                 output_tokens=int(outs[i]),
                 payload_bytes=spec.payload_bytes,
                 session_id=int(sessions[i]),
-                prefix_tokens=prefix)
+                prefix_tokens=min(prefix0, int(prompts[i])))
         for i, t in enumerate(times)
     ]

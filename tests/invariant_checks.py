@@ -27,13 +27,14 @@ def latency_model() -> LatencyModel:
 
 def run_sim(workload: WorkloadSpec, policy_name: str, *,
             replicas: int = 1, router: str = "round-robin",
-            autoscale: bool = False, memory=None,
+            autoscale: bool = False, memory=None, disaggregation=None,
             **policy_kw) -> SimResult:
     policy = make_policy(policy_name, **policy_kw)
     return simulate_cluster(
         workload, policy, latency_model(),
         cluster=ClusterSpec(replicas=replicas, router=router,
-                            autoscale=autoscale, memory=memory))
+                            autoscale=autoscale, memory=memory,
+                            disaggregation=disaggregation))
 
 
 def policy_cap(policy_name: str, **policy_kw) -> int:

@@ -41,7 +41,8 @@ def test_execute_registered_job():
     assert r["requests"] > 0 and r["p99_s"] >= r["p50_s"] > 0
     assert rec["cold_start_s"] > 0
     assert set(rec["stages"]) == {"preprocess", "transmit", "queue",
-                                  "batch_wait", "inference", "postprocess"}
+                                  "batch_wait", "kv_transfer", "inference",
+                                  "postprocess"}
 
 
 def test_session_end_to_end(tmp_path):

@@ -1,0 +1,394 @@
+"""Disaggregated prefill/decode serving, phase (TTFT/TPOT/goodput)
+metrics, the session-affinity remapping fix, and replica-second cost
+accounting."""
+import dataclasses
+
+import pytest
+
+from repro import hw as hw_lib
+from repro.configs import get_config
+from repro.core import BenchmarkJobSpec, run_stages
+from repro.core.spec import PlanSpec
+from repro.calibrate.planner import plan_capacity
+from repro.serving.batching import make_policy
+from repro.serving.cluster import (ClusterSpec, DisaggSpec,
+                                   SessionAffinityRouter, simulate_cluster)
+from repro.serving.latency_model import LatencyModel
+from repro.serving.simulator import RequestTrace, SimResult, simulate
+from repro.serving.workload import Request, WorkloadSpec, generate
+
+from invariant_checks import (check_all_complete_exactly_once,
+                              check_busy_bound,
+                              check_duration_covers_window,
+                              check_memory_invariants, check_stage_sanity,
+                              run_sim)
+
+
+@pytest.fixture(scope="module")
+def lat():
+    return LatencyModel(get_config("gemma2-2b"), chips=4)
+
+
+def _mixed_workload(rate, duration_s=2.0, seed=6):
+    """Mixed long-prefill/short-decode load (disaggregation's home turf)."""
+    return WorkloadSpec(rate=rate, duration_s=duration_s, prompt_tokens=64,
+                        prompt_tokens_max=4096, output_tokens=2,
+                        output_tokens_max=8, seed=seed)
+
+
+def _disagg(prefill=3, decode=1, **kw):
+    return ClusterSpec(disaggregation=DisaggSpec(
+        prefill_replicas=prefill, decode_replicas=decode,
+        prefill_chunk_tokens=512, prefill_max_batch=8, **kw))
+
+
+# ---- TTFT / TPOT / goodput on hand-computable traces -----------------------
+def _trace(req_id, arrival, first, done, tokens, post=0.0):
+    r = Request(req_id=req_id, arrival_s=arrival, prompt_tokens=8,
+                output_tokens=tokens, payload_bytes=0)
+    return RequestTrace(request=r, t_postprocess=post, done_s=done,
+                        first_token_s=first, tokens_out=tokens)
+
+
+class TestPhaseMetrics:
+    def _result(self):
+        # A: ttft 0.5, 6 tokens over [0.5, 1.0] → tpot 0.1
+        # B: ttft 0.2, single token → no defined tpot
+        traces = [_trace(0, arrival=0.0, first=0.5, done=1.0, tokens=6),
+                  _trace(1, arrival=1.0, first=1.2, done=1.2, tokens=1)]
+        return SimResult(traces=traces, busy_s=0.0, duration_s=10.0,
+                         hw=hw_lib.TPU_V5E, chips=1)
+
+    def test_ttft_tpot_values(self):
+        res = self._result()
+        assert sorted(res.ttfts()) == pytest.approx([0.2, 0.5])
+        assert list(res.tpots()) == pytest.approx([0.1])
+        assert res.ttft(50) == pytest.approx(0.35)
+        assert res.ttft(99) == pytest.approx(0.497)
+        assert res.tpot(50) == pytest.approx(0.1)
+
+    def test_postprocess_excluded_from_tpot(self):
+        tr = _trace(0, arrival=0.0, first=0.5, done=1.1, tokens=6,
+                    post=0.1)
+        assert tr.tpot == pytest.approx(0.1)    # (1.1-0.1-0.5)/5
+
+    def test_goodput_requires_both_slos(self):
+        res = self._result()
+        # both meet ttft<=0.6 and tpot<=0.15 (B trivially: no decode)
+        assert res.goodput(0.6, 0.15) == pytest.approx(0.2)
+        # A misses ttft<=0.3 → only B counts
+        assert res.goodput(0.3, 0.15) == pytest.approx(0.1)
+        # A misses tpot<=0.05 → only B counts
+        assert res.goodput(0.6, 0.05) == pytest.approx(0.1)
+
+    def test_phase_slo_attainment(self):
+        res = self._result()
+        assert res.phase_slo_attainment(ttft_slo_s=0.6,
+                                        tpot_slo_s=0.15) == 1.0
+        assert res.phase_slo_attainment(ttft_slo_s=0.3) == 0.5
+        assert res.phase_slo_attainment(ttft_slo_s=0.6,
+                                        tpot_slo_s=0.05) == 0.5
+
+    def test_empty_result(self):
+        res = SimResult(traces=[], busy_s=0, duration_s=0,
+                        hw=hw_lib.TPU_V5E, chips=1)
+        assert res.ttft(99) == 0.0 and res.tpot(99) == 0.0
+        assert res.goodput(0.1, 0.1) == 0.0
+        assert res.phase_slo_attainment(ttft_slo_s=0.1) == 0.0
+
+    def test_simulated_traces_populate_phases(self, lat):
+        wl = WorkloadSpec(rate=60, duration_s=1, output_tokens=8, seed=0)
+        for policy in ("tfs", "continuous"):
+            res = simulate(wl, make_policy(policy, max_batch=8), lat)
+            assert len(res.ttfts()) == len(res.traces)
+            assert all(t.t_first_token > 0 for t in res.traces)
+            assert all(t.tpot > 0 for t in res.traces)
+            # first token cannot come after completion
+            assert all(t.first_token_s
+                       <= t.done_s - t.t_postprocess + 1e-9
+                       for t in res.traces)
+
+
+# ---- disaggregated cluster simulation --------------------------------------
+class TestDisaggregatedServing:
+    def test_invariants_hold(self, lat):
+        wl = _mixed_workload(rate=150)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=16), lat,
+            cluster=_disagg(prefill=2, decode=2))
+        check_all_complete_exactly_once(wl, res)
+        check_stage_sanity(res, 16)     # e2e == done-arrival incl. handoff
+        check_busy_bound(res)
+        check_duration_covers_window(wl, res)
+        assert res.replicas == 4
+        assert res.router == "disaggregated"
+        assert res.pools["migrated_requests"] > 0
+
+    def test_kv_transfer_clocked_for_migrated_requests(self, lat):
+        wl = _mixed_workload(rate=100)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=16), lat,
+            cluster=_disagg(prefill=2, decode=2))
+        multi = [t for t in res.traces if t.request.output_tokens > 1]
+        assert multi
+        assert all(t.t_kv_transfer > 0 for t in multi)
+        # transfer scales with the prompt (bytes = kv/token × prompt)
+        big = max(multi, key=lambda t: t.request.prompt_tokens)
+        small = min(multi, key=lambda t: t.request.prompt_tokens)
+        assert big.t_kv_transfer > small.t_kv_transfer
+
+    def test_single_token_requests_never_migrate(self, lat):
+        from repro.serving.simulator import POST_PROCESS_S
+        wl = WorkloadSpec(rate=80, duration_s=1, output_tokens=1, seed=3)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=16), lat,
+            cluster=_disagg(prefill=1, decode=1))
+        assert len(res.traces) == len(generate(wl))
+        assert all(t.t_kv_transfer == 0.0 for t in res.traces)
+        assert res.pools["migrated_requests"] == 0
+        # the decode pool never ran
+        assert res.pools["decode_busy_s"] == 0.0
+        # requests completing on the prefill pool still pay postprocess
+        # (no colocated-vs-disaggregated accounting asymmetry)
+        assert all(t.t_postprocess == POST_PROCESS_S for t in res.traces)
+
+    def test_memory_accounting_drains(self, lat):
+        wl = WorkloadSpec(rate=80, duration_s=1.5, prompt_tokens=96,
+                          output_tokens=8, output_tokens_max=32, seed=4)
+        res = run_sim(wl, "continuous", max_batch=16,
+                      disaggregation={"prefill_replicas": 2,
+                                      "decode_replicas": 2},
+                      memory={"hbm_gb": 0.5, "prefix_caching": False})
+        check_all_complete_exactly_once(wl, res)
+        check_memory_invariants(res)
+
+    def test_beats_colocated_ttft_on_mixed_workload(self, lat):
+        """Acceptance: at matched chip count, a prefill/decode split wins
+        p99 TTFT (and TPOT) on a mixed long-prefill/short-decode load."""
+        wl = _mixed_workload(rate=260)
+        coloc = simulate_cluster(
+            wl, make_policy("continuous", max_batch=16, max_prefill=8),
+            lat, cluster=ClusterSpec(replicas=4, router="least-loaded"))
+        dis = simulate_cluster(
+            wl, make_policy("continuous", max_batch=16, max_prefill=8),
+            lat, cluster=_disagg(prefill=3, decode=1))
+        assert len(dis.traces) == len(coloc.traces) == len(generate(wl))
+        assert dis.ttft(99) < coloc.ttft(99)
+        assert dis.tpot(99) < coloc.tpot(99)
+
+    def test_requires_continuous_policy(self, lat):
+        wl = _mixed_workload(rate=50, duration_s=0.5)
+        with pytest.raises(ValueError, match="continuous"):
+            simulate_cluster(wl, make_policy("tfs"), lat,
+                             cluster=_disagg())
+
+    def test_rejects_autoscale(self):
+        with pytest.raises(ValueError, match="autoscale"):
+            ClusterSpec(autoscale=True,
+                        disaggregation=DisaggSpec())
+
+    def test_spec_validation_and_round_trip(self):
+        with pytest.raises(ValueError):
+            DisaggSpec(prefill_replicas=0)
+        with pytest.raises(ValueError):
+            DisaggSpec(kv_network="nope")
+        with pytest.raises(ValueError):
+            DisaggSpec(prefill_chunk_tokens=-512)
+        spec = BenchmarkJobSpec(
+            job_id="d0",
+            software={"policy": "continuous", "max_batch": 16},
+            cluster={"disaggregation": {"prefill_replicas": 2,
+                                        "decode_replicas": 2,
+                                        "kv_network": "nvlink"}})
+        again = BenchmarkJobSpec.from_dict(spec.to_dict())
+        assert again == spec
+        assert again.cluster.disaggregation.total_replicas == 4
+
+    def test_run_stages_reports_phase_metrics(self):
+        spec = BenchmarkJobSpec(
+            job_id="d1", chips=4, slo_ttft_s=2.0, slo_tpot_s=0.5,
+            software={"policy": "continuous", "max_batch": 16},
+            cluster={"disaggregation": {"prefill_replicas": 1,
+                                        "decode_replicas": 1}},
+            workload=WorkloadSpec(rate=40, duration_s=1, output_tokens=4,
+                                  seed=0))
+        result = run_stages(BenchmarkJobSpec.from_dict(spec.to_dict()))
+        m = result.metrics
+        assert m["ttft_p99_s"] > 0 and m["tpot_p99_s"] > 0
+        assert 0.0 <= m["phase_slo_attainment"] <= 1.0
+        assert m["goodput_rps"] <= m["throughput_rps"] + 1e-9
+        assert result.cluster["pools"]["prefill_replicas"] == 1
+        assert result.stages.kv_transfer > 0
+        rec = result.to_record()
+        assert rec["stages"]["kv_transfer"] > 0
+
+
+# ---- phase-SLO capacity planning (colocated vs disaggregated) --------------
+class TestPlannerPhaseSlos:
+    def test_tight_ttft_slo_prefers_disaggregated(self, lat):
+        wl = _mixed_workload(rate=240)
+        plan = plan_capacity(
+            lat, wl, ttft_slo_s=0.35, tpot_slo_s=0.03, slo_target=0.9,
+            replicas=(4,), policies=("continuous",),
+            routers=("least-loaded",), prefill_decode_splits=((3, 1),))
+        assert plan.best is not None
+        assert plan.best.split == (3, 1)
+        coloc = [c for c in plan.candidates if c.split is None]
+        assert coloc and not coloc[0].meets_slo
+        assert all("goodput_rps" in c.metrics for c in plan.candidates)
+
+    def test_colocated_wins_when_transfer_dominates(self, lat):
+        wl = _mixed_workload(rate=140)
+        plan = plan_capacity(
+            lat, wl, ttft_slo_s=0.2, tpot_slo_s=0.05, slo_target=0.9,
+            replicas=(4,), policies=("continuous",),
+            routers=("least-loaded",), prefill_decode_splits=((3, 1),),
+            kv_network="4g")     # KV handoff over a slow link
+        assert plan.best is not None
+        assert plan.best.split is None
+        dis = [c for c in plan.candidates if c.split is not None]
+        assert dis and not dis[0].meets_slo
+
+    def test_requires_some_slo(self, lat):
+        with pytest.raises(ValueError, match="SLO"):
+            plan_capacity(lat, WorkloadSpec(rate=10, duration_s=0.5))
+
+    def test_memory_check_sizes_at_longest_prompt(self, lat):
+        """The static KV admission check must use prompt_tokens_max, not
+        the minimum prompt, for mixed-prompt workloads."""
+        from repro.serving.memory import MemorySpec
+        wl = WorkloadSpec(rate=10, duration_s=0.5, prompt_tokens=64,
+                          prompt_tokens_max=4096, output_tokens=2)
+        plan = plan_capacity(
+            lat, wl, slo_latency_s=0.25, replicas=(1,),
+            policies=("continuous",), max_batch=64,
+            memory=MemorySpec(hbm_gb=1.0))
+        c = plan.candidates[0]
+        # 64 slots × ~4100 tokens × ~104 KB/token ≫ 1 GiB: must be
+        # rejected up front (sizing at prompt_tokens=64 would pass)
+        assert c.infeasible_reason is not None
+        assert "4098 tok" in c.infeasible_reason
+
+    def test_plan_spec_round_trip(self):
+        spec = PlanSpec(job_id="p0", profile="x@y", ttft_slo_s=0.2,
+                        tpot_slo_s=0.05, slo_latency_s=None,
+                        prefill_decode_splits=[[3, 1], [2, 2]])
+        assert spec.prefill_decode_splits == ((3, 1), (2, 2))
+        again = PlanSpec.from_dict(spec.to_dict())
+        assert again.prefill_decode_splits == ((3, 1), (2, 2))
+        assert again.ttft_slo_s == 0.2 and again.slo_latency_s is None
+
+
+# ---- satellite: session-affinity remapping fix -----------------------------
+class _FakeEngine:
+    def __init__(self, replica_id):
+        self.replica_id = replica_id
+
+
+class TestSessionAffinityRemapping:
+    def _homes(self, router, engines, sessions):
+        return {s: engines[router.route(
+            Request(req_id=0, arrival_s=0.0, prompt_tokens=1,
+                    output_tokens=1, payload_bytes=0, session_id=s),
+            engines, 0.0)].replica_id for s in sessions}
+
+    def test_only_retired_replicas_sessions_move(self):
+        router = SessionAffinityRouter()
+        engines = [_FakeEngine(i) for i in range(4)]
+        sessions = range(64)
+        before = self._homes(router, engines, sessions)
+        # every replica should host some sessions (rendezvous balance)
+        assert {before[s] for s in sessions} == {0, 1, 2, 3}
+        # retire replica 2: only its sessions remap
+        live = [e for e in engines if e.replica_id != 2]
+        after = self._homes(router, live, sessions)
+        for s in sessions:
+            if before[s] == 2:
+                assert after[s] != 2
+            else:
+                assert after[s] == before[s]
+
+    def test_scale_up_keeps_existing_sessions(self):
+        router = SessionAffinityRouter()
+        engines = [_FakeEngine(i) for i in range(3)]
+        sessions = range(64)
+        before = self._homes(router, engines, sessions)
+        grown = engines + [_FakeEngine(3)]
+        after = self._homes(router, grown, sessions)
+        assert after == before          # 100% stickiness under scale-up
+        # new sessions do land on the new replica
+        fresh = self._homes(router, grown, range(64, 256))
+        assert 3 in set(fresh.values())
+
+    def test_stickiness_under_autoscaler_churn(self, lat):
+        """Regression: autoscaler adds/cold-starts replicas mid-run; every
+        session must stay on one replica (the old modulo-over-filtered-
+        list router remapped all sessions on every churn event)."""
+        wl = WorkloadSpec(rate=900, duration_s=2, output_tokens=8,
+                          session_count=12, seed=9)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(replicas=1, autoscale=True,
+                                max_replicas=5, scale_interval_s=0.2,
+                                spawn_delay_s=0.1, router="affinity"))
+        assert res.replicas > 1         # churn actually happened
+        by_session = {}
+        for t in res.traces:
+            by_session.setdefault(t.request.session_id,
+                                  set()).add(t.replica)
+        assert all(len(reps) == 1 for reps in by_session.values()), \
+            f"sessions split across replicas: {by_session}"
+
+
+# ---- satellite: replica-second cost accounting -----------------------------
+class TestReplicaSecondAccounting:
+    def test_static_cluster_bills_replicas_times_duration(self, lat):
+        wl = WorkloadSpec(rate=100, duration_s=1, output_tokens=2, seed=0)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(replicas=3, router="least-loaded"))
+        assert res.replica_seconds == pytest.approx(3 * res.duration_s)
+        assert res.cost_usd() == pytest.approx(
+            hw_lib.cloud_cost_usd(res.hw.name, res.duration_s)
+            * res.chips * 3)
+        assert res.energy_joules() == pytest.approx(
+            hw_lib.energy_joules(res.hw, res.duration_s,
+                                 res.utilization()) * res.chips * 3)
+
+    def test_autoscaled_cluster_bills_strictly_below_peak(self, lat):
+        """Regression: energy/cost used to multiply peak replicas by the
+        full duration, overcharging autoscaled clusters for spans where
+        scaled-up replicas did not exist yet (or were already retired)."""
+        wl = WorkloadSpec(kind="burst", rate=300, duration_s=2,
+                          burst_factor=8, output_tokens=4, seed=3)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(replicas=1, autoscale=True,
+                                max_replicas=6, scale_interval_s=0.25,
+                                spawn_delay_s=0.2))
+        assert res.replicas > 1
+        peak_span = res.duration_s * res.replicas
+        assert 0 < res.replica_seconds < peak_span
+        peak_cost = hw_lib.cloud_cost_usd(res.hw.name, res.duration_s) \
+            * res.chips * res.replicas
+        assert res.cost_usd() < peak_cost
+        assert res.cost_usd() == pytest.approx(
+            hw_lib.cloud_cost_usd(res.hw.name, res.replica_seconds)
+            * res.chips)
+        # utilization keeps the peak-count denominator (per the spec)
+        assert res.utilization() == pytest.approx(
+            res.busy_s / (res.duration_s * res.replicas))
+        assert res.summary()["replica_seconds"] == pytest.approx(
+            res.replica_seconds)
+
+    def test_retired_replica_stops_billing(self, lat):
+        """A replica retired mid-run bills its spawn→retire span only."""
+        wl = WorkloadSpec(kind="burst", rate=400, duration_s=3,
+                          burst_factor=10, burst_fraction=0.05,
+                          output_tokens=2, seed=5)
+        res = simulate_cluster(
+            wl, make_policy("continuous", max_batch=8), lat,
+            cluster=ClusterSpec(replicas=1, autoscale=True,
+                                max_replicas=4, scale_interval_s=0.1,
+                                spawn_delay_s=0.05, scale_down_load=0.3))
+        assert res.replica_seconds <= res.duration_s * res.replicas

@@ -60,6 +60,19 @@ class TestCompare:
         assert "calibrate:measured_fc.holdout.mean_rel_err" in failures
         assert any(r[-1] == "MISSING" for r in rows)
 
+    def test_abs_tolerance_floors_tiny_metrics(self):
+        """A near-zero metric (e.g. TPOT) drifting by microseconds is a
+        huge relative delta but no regression: abs_tolerance floors it."""
+        baseline = {"metrics": {"cluster:disagg.tpot_p99_s": {
+            "value": 0.003, "direction": "lower",
+            "tolerance": 0.15, "abs_tolerance": 0.002}}}
+        tiny_drift = {"cluster": {"disagg": {"tpot_p99_s": 0.004}}}
+        _, failures = compare(baseline, tiny_drift)
+        assert failures == []           # +33% rel but only +1ms abs
+        real_regression = {"cluster": {"disagg": {"tpot_p99_s": 0.008}}}
+        _, failures = compare(baseline, real_regression)
+        assert failures == ["cluster:disagg.tpot_p99_s"]
+
     def test_per_metric_tolerance_overrides_default(self):
         # holdout 0.05 is +150% over 0.02 but tolerance is 7.0 (8×)
         _, failures = compare(BASELINE, GOOD)
