@@ -15,7 +15,14 @@ Six sections:
       over-allocate while every request still completes;
   (f) disaggregated prefill/decode serving — at a matched chip count on a
       mixed long-prefill/short-decode workload, a 3+1 split must beat 4
-      colocated replicas on p99 TTFT (and TPOT).
+      colocated replicas on p99 TTFT (and TPOT);
+  (g) scenario library — a flash crowd must degrade tail latency vs a
+      steady Poisson stream at *equal mean rate* (burstiness, not volume,
+      is what hurts); a two-tenant cluster must keep the small tenant's
+      goodput within tolerance when the big tenant bursts (isolation);
+      and a tenant-mix capacity plan's cheapest-feasible config must
+      survive independent re-simulation with every tenant meeting its
+      own SLOs.
 
 ``--smoke`` shrinks durations/grids for CI; ``--json PATH`` additionally
 writes the metrics dict to PATH (the perf-regression lane's input).
@@ -258,6 +265,117 @@ def disaggregation_smoke(lm, smoke, out):
          f"colocated {col['tpot_p99_s']:.4f}s")
 
 
+def scenario_section(lm, smoke, out):
+    """(g) scenario library: burstiness vs volume, tenant isolation, and
+    plan-then-verify for a tenant mix."""
+    from repro.calibrate.planner import plan_capacity, simulate_candidate
+    from repro.scenarios import tenant_report
+    from repro.scenarios.arrivals import mean_rate
+
+    # (g1) flash crowd vs steady Poisson at equal mean rate: same offered
+    # work, so any p99 gap is pure burstiness
+    dur = 4 if smoke else 12
+    flash = _gen_workload(kind="flash-crowd", rate=150, duration_s=dur,
+                          burst_factor=10, seed=7)
+    steady = _gen_workload(rate=mean_rate(flash), duration_s=dur, seed=7)
+    cluster = ClusterSpec(replicas=2, router="least-loaded")
+    stats = {}
+    for label, wl in (("flash", flash), ("steady", steady)):
+        res, us = timed(simulate_cluster, wl,
+                        make_policy("continuous", max_batch=16), lm,
+                        cluster=cluster)
+        s = dict(res.summary(), slo_attainment=res.slo_attainment(SLO_S))
+        stats[label] = s
+        out[f"scenario/{label}"] = s
+        emit(f"cluster.scenario.{label}", us,
+             f"thr={s['throughput_rps']:.0f}rps;"
+             f"p99={s['p99_s']*1e3:.0f}ms;"
+             f"slo={s['slo_attainment']:.2f}")
+    p99_ratio = stats["flash"]["p99_s"] / max(stats["steady"]["p99_s"],
+                                              1e-12)
+    out["scenario/flash_ratio"] = {"p99_ratio": p99_ratio,
+                                   "mean_rate_rps": mean_rate(flash)}
+    emit("cluster.finding.flash_vs_steady_equal_mean_rate", 0.0,
+         f"mean_rate={mean_rate(flash):.0f}rps;"
+         f"p99_ratio={p99_ratio:.2f}x;target>1x")
+    assert stats["flash"]["p99_s"] > stats["steady"]["p99_s"], \
+        (f"flash crowd p99 {stats['flash']['p99_s']:.3f}s did not degrade "
+         f"vs steady {stats['steady']['p99_s']:.3f}s at equal mean rate")
+
+    # (g2) two-tenant isolation: the small tenant's goodput must survive
+    # the big tenant switching from steady to bursting
+    def mix(big_overrides):
+        return WorkloadSpec(
+            rate=200, duration_s=4 if smoke else 8,
+            prompt_tokens=128, output_tokens=8, output_tokens_max=32,
+            seed=8,
+            tenants=({"name": "big", "share": 4.0,
+                      "slo_latency_s": SLO_S,
+                      "workload": big_overrides},
+                     {"name": "small", "share": 1.0,
+                      "slo_latency_s": SLO_S}))
+    goodputs = {}
+    for label, overrides in (("steady", {}),
+                             ("burst", {"kind": "burst",
+                                        "burst_factor": 10.0})):
+        wl = mix(overrides)
+        res, us = timed(simulate_cluster, wl,
+                        make_policy("continuous", max_batch=16), lm,
+                        cluster=cluster)
+        rep = tenant_report(res, wl.tenants)
+        per = rep["per_tenant"]
+        goodputs[label] = per["small"]["goodput_rps"]
+        out[f"scenario/isolation_{label}"] = {
+            "fairness_index": rep["fairness_index"],
+            "worst_tenant": rep["worst_tenant"],
+            "small_goodput_rps": per["small"]["goodput_rps"],
+            "big_goodput_rps": per["big"]["goodput_rps"],
+            "small_p99_s": per["small"]["p99_s"],
+            "big_p99_s": per["big"]["p99_s"],
+        }
+        emit(f"cluster.scenario.isolation_{label}", us,
+             f"small_goodput={per['small']['goodput_rps']:.0f}rps;"
+             f"big_goodput={per['big']['goodput_rps']:.0f}rps;"
+             f"fairness={rep['fairness_index']:.3f}")
+    retained = goodputs["burst"] / max(goodputs["steady"], 1e-9)
+    out["scenario/isolation_retained"] = {"small_goodput_ratio": retained}
+    emit("cluster.finding.tenant_isolation", 0.0,
+         f"small_goodput_retained={retained:.2f}x;target>=0.7x")
+    assert retained >= 0.7, \
+        (f"big tenant's burst cut the small tenant's goodput to "
+         f"{retained:.2f}x of steady (< 0.7x) — isolation failed")
+
+    # (g3) tenant-mix capacity plan, then verify the winner by
+    # independent re-simulation: every tenant must meet its own SLOs
+    target = 0.9
+    base = WorkloadSpec(rate=16, duration_s=3 if smoke else 6, seed=11)
+    tenants = ({"name": "chatbot", "share": 3.0, "scenario": "chat"},
+               {"name": "classifier", "share": 1.0,
+                "scenario": "classification"})
+    plan, us = timed(plan_capacity, lm, base, tenants=tenants,
+                     slo_target=target, replicas=(1, 2),
+                     policies=("continuous",), max_batch=16)
+    best = plan.best
+    assert best is not None, "no feasible config for the tenant mix"
+    res = simulate_candidate(lm, base, best, tenants=tenants)
+    rep = tenant_report(res, tenants)
+    for name, per in rep["per_tenant"].items():
+        assert per["slo_attainment"] >= target, \
+            (f"re-simulated best config misses tenant {name}: "
+             f"attainment {per['slo_attainment']:.2f} < {target}")
+    out["scenario/plan"] = {
+        "replicas": best.replicas, "policy": best.policy,
+        "objective": best.objective,
+        "fairness_index": rep["fairness_index"],
+        "worst_attainment": rep["worst_tenant_attainment"],
+        "min_goodput_rps": rep["min_goodput_rps"],
+    }
+    emit("cluster.scenario.plan", us,
+         f"best={best.replicas}x{best.policy};"
+         f"worst_att={rep['worst_tenant_attainment']:.2f};"
+         f"fairness={rep['fairness_index']:.3f}")
+
+
 def run(smoke: bool = False, json_path: str | None = None) -> None:
     lm = LatencyModel(get_config(MODEL), chips=CHIPS)
     out = {}
@@ -267,6 +385,7 @@ def run(smoke: bool = False, json_path: str | None = None) -> None:
     autoscale_demo(lm, smoke, out)
     memory_pressure(lm, smoke, out)
     disaggregation_smoke(lm, smoke, out)
+    scenario_section(lm, smoke, out)
     # knee of the ramp per policy (for the writeup)
     wl = _gen_workload(kind="ramp", duration_s=2 if smoke else 6,
                        ramp_min_rate=50, ramp_max_rate=500,

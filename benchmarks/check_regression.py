@@ -12,7 +12,11 @@ Baseline schema::
       "metrics": {
         "<namespace>:<dotted.path>": {
           "value": 123.4,            # the committed reference number
-          "direction": "higher",     # "higher" | "lower" is better
+          "direction": "higher",     # "higher" | "lower" is better, or
+                                     # "near": the value must stay within
+                                     # tolerance of the baseline in either
+                                     # direction (band metrics like a
+                                     # fairness index)
           "tolerance": 0.15,         # optional per-metric override
           "abs_tolerance": 0.001     # optional absolute floor: a metric
                                      # only fails when it moved in the bad
@@ -78,7 +82,7 @@ def compare(baseline: Dict[str, Any], inputs: Dict[str, Dict[str, Any]],
         ns, _, path = name.partition(":")
         base = float(entry["value"])
         direction = entry.get("direction", "higher")
-        if direction not in ("higher", "lower"):
+        if direction not in ("higher", "lower", "near"):
             raise ValueError(f"{name}: bad direction {direction!r}")
         tol = float(entry.get("tolerance", tol0))
         cur = get_path(inputs.get(ns), path)
@@ -92,12 +96,20 @@ def compare(baseline: Dict[str, Any], inputs: Dict[str, Dict[str, Any]],
         else:
             delta = 0.0 if cur == 0 else float("inf") * (1 if cur > 0
                                                          else -1)
-        worse = -delta if direction == "higher" else delta
+        if direction == "near":
+            # band metric (e.g. a fairness index): drift in *either*
+            # direction beyond tolerance is a regression
+            worse = abs(delta)
+        else:
+            worse = -delta if direction == "higher" else delta
         failed = worse > tol
         abs_tol = entry.get("abs_tolerance")
         if failed and abs_tol is not None:
-            worse_abs = (base - cur) if direction == "higher" \
-                else (cur - base)
+            if direction == "near":
+                worse_abs = abs(cur - base)
+            else:
+                worse_abs = (base - cur) if direction == "higher" \
+                    else (cur - base)
             failed = worse_abs > float(abs_tol)
         status = "FAIL" if failed else "ok"
         if status == "FAIL":

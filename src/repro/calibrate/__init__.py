@@ -25,7 +25,8 @@ from repro.calibrate.microbench import (fit_calibration, measured_records,
                                         oracle_records, run_calibration_job,
                                         sweep_calibration)
 from repro.calibrate.planner import (PlanCandidate, PlanResult, plan_capacity,
-                                     plan_from_spec, run_plan_job)
+                                     plan_from_spec, run_plan_job,
+                                     simulate_candidate)
 from repro.calibrate.profile import (DEFAULT_PROFILE_DIR, PROFILE_SCHEMA,
                                      CalibrationProfile, PhaseFit,
                                      load_profile, profile_path)
@@ -35,6 +36,6 @@ __all__ = [
     "DEFAULT_PROFILE_DIR", "PROFILE_SCHEMA",
     "fit_calibration", "fit_phase", "fit_records", "load_profile",
     "measured_records", "oracle_records", "plan_capacity", "plan_from_spec",
-    "profile_path", "run_calibration_job", "run_plan_job", "split_points",
-    "sweep_calibration",
+    "profile_path", "run_calibration_job", "run_plan_job",
+    "simulate_candidate", "split_points", "sweep_calibration",
 ]

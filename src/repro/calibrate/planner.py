@@ -124,6 +124,7 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                   slo_target: float = 0.99,
                   ttft_slo_s: Optional[float] = None,
                   tpot_slo_s: Optional[float] = None,
+                  tenants: Sequence[Any] = (),
                   replicas: Sequence[int] = (1, 2, 4),
                   policies: Sequence[str] = ("tfs", "continuous"),
                   routers: Sequence[str] = ("least-loaded",),
@@ -146,6 +147,15 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
     by.  Attainment is joint — a request counts only when it meets
     *every* provided SLO — and at least one SLO must be given.
 
+    ``tenants`` plans for a traffic mix instead of one stream: the
+    workload is split across the given ``TenantSpec``s (shares, per-
+    tenant scenarios/overrides) and a candidate is feasible only when
+    its *worst* tenant meets that tenant's own resolved SLOs at the
+    target, so the plan is the cheapest config under which every tenant
+    survives.  Candidate metrics gain the per-tenant slices plus
+    ``fairness_index``/``min_goodput_rps``; the top-level SLO arguments
+    become optional (each tenant must resolve at least one SLO).
+
     ``prefill_decode_splits`` adds disaggregated candidates to the grid:
     each ``(prefill, decode)`` pair is simulated as split pools (total
     replicas = prefill + decode, KV handoff over ``kv_network``) under
@@ -159,7 +169,20 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
     shows up in their latency numbers.  ``max_batches`` widens the grid
     over decode-slot counts (default: just ``max_batch``).
     """
-    if slo_latency_s is None and ttft_slo_s is None and tpot_slo_s is None:
+    tenant_specs = ()
+    if tenants:
+        from repro.scenarios.tenants import (coerce_tenants,
+                                             resolve_tenant_slos,
+                                             tenant_workload)
+        tenant_specs = coerce_tenants(tenants)
+        for t in tenant_specs:
+            if all(v is None for v in resolve_tenant_slos(t).values()):
+                raise ValueError(
+                    f"tenant {t.name!r} resolves no SLO: give it "
+                    "slo_latency_s/slo_ttft_s/slo_tpot_s or a scenario "
+                    "whose profile carries defaults")
+        workload = dataclasses.replace(workload, tenants=tenant_specs)
+    elif slo_latency_s is None and ttft_slo_s is None and tpot_slo_s is None:
         raise ValueError("plan_capacity needs at least one SLO: "
                          "slo_latency_s, ttft_slo_s, or tpot_slo_s")
     if isinstance(profile, CalibrationProfile):
@@ -191,12 +214,23 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                                                  mbs):
             grid.append((pre + dec, pol, router, int(mb), (pre, dec)))
 
+    # the static memory check sizes at the longest-context slice of the
+    # traffic; for a tenant mix that is each tenant's own specialized
+    # workload, not the parent shell
+    sizing_workloads = [workload]
+    if tenant_specs:
+        sizing_workloads = [tenant_workload(workload, t, i, workload.rate)
+                            for i, t in enumerate(tenant_specs)]
+
     candidates: List[PlanCandidate] = []
     for n, pol, router, mb, split in grid:
         reason = None
         if memory is not None:
-            reason = _memory_working_set_reason(memory, oracle, workload,
-                                                mb)
+            reason = next(
+                (r for r in (_memory_working_set_reason(memory, oracle,
+                                                        wl, mb)
+                             for wl in sizing_workloads)
+                 if r is not None), None)
         if reason is not None:
             candidates.append(PlanCandidate(
                 replicas=n, policy=pol, router=router, metrics={},
@@ -225,16 +259,28 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                 meets_slo=False, objective=float("inf"),
                 max_batch=mb, split=split, infeasible_reason=str(exc)))
             continue
-        if phase_slos:
-            att = res.phase_slo_attainment(ttft_slo_s=ttft_slo_s,
-                                           tpot_slo_s=tpot_slo_s,
-                                           e2e_slo_s=slo_latency_s)
+        if tenant_specs:
+            # a tenant mix is judged by its weakest member: every
+            # tenant must hit its *own* resolved SLOs at the target
+            from repro.scenarios.tenants import tenant_report
+            report = tenant_report(res, tenant_specs)
+            att = report["worst_tenant_attainment"]
+            metrics = dict(res.summary(), slo_attainment=att,
+                           fairness_index=report["fairness_index"],
+                           worst_tenant=report["worst_tenant"],
+                           min_goodput_rps=report["min_goodput_rps"],
+                           tenants=report["per_tenant"])
         else:
-            att = res.slo_attainment(slo_latency_s)
-        metrics = dict(res.summary(), slo_attainment=att)
-        if phase_slos:
-            metrics["goodput_rps"] = res.goodput(ttft_slo_s, tpot_slo_s,
-                                                 slo_latency_s)
+            if phase_slos:
+                att = res.phase_slo_attainment(ttft_slo_s=ttft_slo_s,
+                                               tpot_slo_s=tpot_slo_s,
+                                               e2e_slo_s=slo_latency_s)
+            else:
+                att = res.slo_attainment(slo_latency_s)
+            metrics = dict(res.summary(), slo_attainment=att)
+            if phase_slos:
+                metrics["goodput_rps"] = res.goodput(ttft_slo_s, tpot_slo_s,
+                                                     slo_latency_s)
         if objective not in metrics:
             raise ValueError(
                 f"unknown plan objective {objective!r} "
@@ -251,12 +297,61 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                       ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
 
 
+def simulate_candidate(profile, workload: WorkloadSpec,
+                       candidate: PlanCandidate, *,
+                       tenants: Sequence[Any] = (),
+                       max_prefill: int = 8,
+                       kv_network: str = "infiniband",
+                       network: str = "lan",
+                       memory: Optional[MemorySpec] = None):
+    """Re-simulate one plan candidate and return the raw ``SimResult``.
+
+    This is the verification half of plan → verify: rebuild exactly the
+    cluster a :class:`PlanCandidate` describes and run the workload
+    through it, so a caller can independently confirm the planner's
+    claimed attainment (e.g. per-tenant SLOs of the cheapest feasible
+    config) rather than trust the grid numbers.
+    """
+    if isinstance(profile, CalibrationProfile):
+        oracle = profile.to_latency_model()
+    elif isinstance(profile, (str, dict)):
+        from repro.serving.latency_model import FittedLatencyModel
+        oracle = FittedLatencyModel.from_profile(profile)
+    else:
+        oracle = profile
+    if isinstance(memory, dict):
+        memory = MemorySpec.from_dict(memory)
+    if tenants:
+        from repro.scenarios.tenants import coerce_tenants
+        workload = dataclasses.replace(workload,
+                                       tenants=coerce_tenants(tenants))
+    if candidate.split is None:
+        cluster = ClusterSpec(replicas=candidate.replicas,
+                              router=candidate.router, memory=memory)
+    else:
+        pre, dec = candidate.split
+        cluster = ClusterSpec(
+            replicas=candidate.replicas, router=candidate.router,
+            memory=memory,
+            disaggregation=DisaggSpec(
+                prefill_replicas=pre, decode_replicas=dec,
+                prefill_router=candidate.router,
+                decode_router=candidate.router,
+                prefill_max_batch=max_prefill, kv_network=kv_network))
+    mb = candidate.max_batch or 16
+    return simulate_cluster(workload,
+                            _policy(candidate.policy, mb, max_prefill),
+                            oracle, cluster=cluster,
+                            network=NETWORKS[network])
+
+
 def plan_from_spec(spec: PlanSpec) -> PlanResult:
     profile = load_profile(spec.profile, spec.profile_dir)
     return plan_capacity(
         profile, spec.workload, slo_latency_s=spec.slo_latency_s,
         slo_target=spec.slo_target,
         ttft_slo_s=spec.ttft_slo_s, tpot_slo_s=spec.tpot_slo_s,
+        tenants=spec.tenants,
         replicas=spec.replicas,
         policies=spec.policies, routers=spec.routers,
         max_batch=spec.max_batch, max_batches=spec.max_batches,

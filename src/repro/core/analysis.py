@@ -86,6 +86,20 @@ def slo_attainment(latencies: Sequence[float], slo_latency_s: float) -> float:
     return float(np.mean(lat <= slo_latency_s))
 
 
+def jain_index(values: Sequence[float]) -> float:
+    """Jain's fairness index: (Σx)² / (n·Σx²) over per-tenant allocations.
+
+    1.0 when every tenant gets an equal (share-normalized) allocation,
+    → 1/n as a single tenant monopolizes; 0.0 for empty/all-zero input
+    (nothing was allocated, so no fairness to speak of).
+    """
+    v = np.asarray(values, dtype=float)
+    denom = v.size * float(np.square(v).sum())
+    if denom == 0.0:
+        return 0.0
+    return float(v.sum()) ** 2 / denom
+
+
 def saturation_knee(rates: Sequence[float], p99s: Sequence[float],
                     slo_latency_s: float) -> Optional[float]:
     """Highest offered rate whose p99 still meets the SLO (ramp sweeps).

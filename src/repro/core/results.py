@@ -140,6 +140,10 @@ class JobResult:
                 "network": spec.network,
                 "spec": spec.to_dict(),
             }
+            if spec.scenario:
+                # top-level so PerfDB queries can filter by scenario
+                # without walking into the spec
+                rec["scenario"] = spec.scenario
         if self.generated is not None:
             rec["generated"] = dict(self.generated)
         rec["result"] = dict(self.metrics)

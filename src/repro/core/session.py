@@ -127,6 +127,11 @@ def run_stages(spec: AnyJobSpec) -> JobResult:
             e2e_slo_s=spec.slo_latency_s)
         metrics["goodput_rps"] = res.goodput(
             spec.slo_ttft_s, spec.slo_tpot_s, spec.slo_latency_s)
+    if spec.workload.tenants:
+        # multi-tenant run: per-tenant goodput/attainment against each
+        # tenant's own SLOs + fairness/isolation aggregates
+        from repro.scenarios.tenants import tenant_report
+        metrics["tenants"] = tenant_report(res, spec.workload.tenants)
     cluster_info = {
         "replicas": res.replicas,
         "router": res.router,

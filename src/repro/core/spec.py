@@ -82,6 +82,11 @@ class BenchmarkJobSpec:
     workload: WorkloadSpec = WorkloadSpec()
     cluster: ClusterSpec = ClusterSpec()
     network: str = "lan"
+    # named production scenario (repro.scenarios.profiles): one config
+    # line — {"scenario": "chat"} — fills the workload's token/session
+    # distributions and the job's SLOs with the profile's values;
+    # explicitly-set fields always win over the profile
+    scenario: Optional[str] = None
     slo_latency_s: Optional[float] = None
     # phase SLOs (the TTFT/TPOT language LLM deployments are judged by):
     # when either is set, results gain goodput_rps + phase_slo_attainment
@@ -107,6 +112,19 @@ class BenchmarkJobSpec:
                                                       list):
                     d["preferred"] = tuple(d["preferred"])
                 object.__setattr__(self, field, cls(**d))
+        if self.scenario:
+            # resolve the named profile: fill workload fields left at
+            # their defaults, and adopt the profile's SLOs where the job
+            # declares none (idempotent, so to_dict → from_dict round
+            # trips are stable)
+            from repro.scenarios.profiles import get_profile
+            prof = get_profile(self.scenario)
+            object.__setattr__(self, "workload",
+                               prof.apply_to_workload(self.workload))
+            for slo_field, default in prof.slos().items():
+                if default is not None \
+                        and getattr(self, slo_field) is None:
+                    object.__setattr__(self, slo_field, default)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -234,6 +252,10 @@ class PlanSpec:
     user: str = "dev"
     profile_dir: str = "configs/profiles"
     workload: WorkloadSpec = WorkloadSpec()
+    # multi-tenant mix: TenantSpec list (or dicts) splitting the
+    # workload's aggregate rate — the plan then requires *every*
+    # tenant's own SLOs at slo_target (see repro.scenarios.tenants)
+    tenants: Sequence[Any] = ()
     slo_latency_s: Optional[float] = 0.25
     slo_target: float = 0.99             # required attainment fraction
     # phase SLOs: attainment becomes joint over every SLO provided (set
@@ -269,6 +291,12 @@ class PlanSpec:
         if isinstance(self.memory, dict):
             object.__setattr__(self, "memory",
                                MemorySpec.from_dict(self.memory))
+        if self.tenants:
+            from repro.scenarios.tenants import coerce_tenants
+            object.__setattr__(self, "tenants",
+                               coerce_tenants(self.tenants))
+        else:
+            object.__setattr__(self, "tenants", ())
         for field in ("replicas", "policies", "routers", "max_batches"):
             val = getattr(self, field)
             if isinstance(val, list):

@@ -180,6 +180,26 @@ class SimResult:
         qs = np.linspace(0, 1, points)
         return list(np.quantile(lat, qs)), list(qs)
 
+    # ---- per-tenant slicing (multi-tenant workloads) ---------------------
+    def tenants(self) -> List[str]:
+        """Tenant names present in the served traces (multi-tenant
+        workloads tag every request; [] for single-tenant runs)."""
+        return sorted({t.request.tenant for t in self.traces
+                       if t.request.tenant})
+
+    def tenant_result(self, name: str) -> "SimResult":
+        """This result restricted to one tenant's requests.
+
+        Latency/TTFT/TPOT/goodput metrics of the slice are exact;
+        cluster-wide provenance (busy_s, memory, pools) stays aggregate,
+        and cost/energy still bill the whole cluster — tenants share the
+        fleet, so per-tenant dollars need an attribution policy, not a
+        slice.  Use :func:`repro.scenarios.tenants.tenant_report` for
+        the fairness/isolation view across all tenants.
+        """
+        sub = [t for t in self.traces if t.request.tenant == name]
+        return dataclasses.replace(self, traces=sub)
+
     def billed_replica_seconds(self) -> float:
         """Replica-seconds energy/cost are billed over: the integrated
         live-replica span when the event loop measured it, else the static

@@ -83,6 +83,18 @@ class TestCompare:
         _, failures = compare(BASELINE, eightfold)
         assert failures == ["calibrate:measured_fc.holdout.mean_rel_err"]
 
+    def test_near_direction_fails_both_ways(self):
+        """Band metrics (fairness index) regress on drift in *either*
+        direction; within-band drift passes."""
+        baseline = {"metrics": {"cluster:scenario/iso.fairness_index": {
+            "value": 0.9, "direction": "near", "tolerance": 0.1}}}
+        for val, ok in ((0.95, True), (0.85, True),
+                        (0.70, False), (1.20, False)):
+            _, failures = compare(
+                baseline,
+                {"cluster": {"scenario/iso": {"fairness_index": val}}})
+            assert (failures == []) is ok, val
+
     def test_get_path(self):
         assert get_path({"a": {"b": 1}}, "a.b") == 1
         assert get_path({"a": {"b": 1}}, "a.c") is None
@@ -122,7 +134,7 @@ class TestMainExitCodes:
         for name, entry in baseline["metrics"].items():
             ns, _, rest = name.partition(":")
             assert ns in ("cluster", "calibrate") and rest, name
-            assert entry["direction"] in ("higher", "lower")
+            assert entry["direction"] in ("higher", "lower", "near")
             float(entry["value"])
         # the issue's headline metrics are all gated
         keys = set(baseline["metrics"])
@@ -130,3 +142,6 @@ class TestMainExitCodes:
         assert any("p99" in k for k in keys)
         assert any("holdout" in k for k in keys)
         assert any("prefix_hit_rate" in k for k in keys)
+        # the scenario lane gates per-tenant goodput + fairness
+        assert any("goodput" in k for k in keys)
+        assert any("fairness" in k for k in keys)

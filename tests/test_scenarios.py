@@ -1,0 +1,468 @@
+"""Scenario library: named workload profiles, production arrival
+processes (diurnal / flash-crowd / sweep), multi-tenant traffic splits
+with fairness metrics, and the synthetic trace scaler."""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.calibrate.planner import plan_capacity, simulate_candidate
+from repro.core.analysis import jain_index
+from repro.core.results import JobResult
+from repro.core.perfdb import PerfDB
+from repro.core.session import BenchmarkSession, resolve_policy
+from repro.core.spec import BenchmarkJobSpec, SoftwareSpec, spec_from_dict
+from repro.scenarios import (ScenarioProfile, TenantSpec, catalog_table,
+                             get_profile, list_profiles, register_profile,
+                             scale_trace, tenant_report, trace_stats,
+                             write_trace_rows)
+from repro.scenarios import arrivals
+from repro.scenarios.tenants import resolve_tenant_slos, tenant_table
+from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.latency_model import NETWORKS, LatencyModel
+from repro.serving.workload import WorkloadSpec, generate
+
+SEED_TRACE = str(Path(__file__).resolve().parent.parent
+                 / "configs" / "traces" / "seed_chat.jsonl")
+
+TENANTS = ({"name": "chatbot", "share": 3.0, "scenario": "chat"},
+           {"name": "classifier", "share": 1.0,
+            "scenario": "classification"})
+
+
+@pytest.fixture(scope="module")
+def lat():
+    return LatencyModel(get_config("gemma2-2b"), chips=4)
+
+
+def _sim(wl, lat, replicas=2, policy="continuous", max_batch=16):
+    pol = resolve_policy(SoftwareSpec(policy=policy, max_batch=max_batch))
+    return simulate_cluster(wl, pol, lat,
+                            cluster=ClusterSpec(replicas=replicas),
+                            network=NETWORKS["lan"])
+
+
+# ---- WorkloadSpec validation (satellite a) ---------------------------------
+class TestWorkloadValidation:
+    def test_unknown_kind(self):
+        with pytest.raises(ValueError, match="unknown workload kind"):
+            WorkloadSpec(kind="sinusoid")
+
+    def test_nonpositive_rate(self):
+        for kind in ("poisson", "uniform", "burst", "diurnal",
+                     "flash-crowd"):
+            with pytest.raises(ValueError, match="rate must be > 0"):
+                WorkloadSpec(kind=kind, rate=0.0)
+
+    def test_nonpositive_duration(self):
+        with pytest.raises(ValueError, match="duration_s must be > 0"):
+            WorkloadSpec(duration_s=-1.0)
+
+    def test_burst_fraction_bounds(self):
+        for bad in (-0.1, 1.5):
+            with pytest.raises(ValueError, match="burst_fraction"):
+                WorkloadSpec(kind="burst", burst_fraction=bad)
+
+    def test_ramp_steps_floor(self):
+        with pytest.raises(ValueError, match="ramp_steps"):
+            WorkloadSpec(kind="ramp", ramp_steps=0)
+
+    def test_sweep_needs_positive_min_rate(self):
+        with pytest.raises(ValueError, match="ramp_min_rate"):
+            WorkloadSpec(kind="sweep", ramp_min_rate=0.0)
+
+    def test_diurnal_amplitude_bounds(self):
+        with pytest.raises(ValueError, match="diurnal_amplitude"):
+            WorkloadSpec(kind="diurnal", diurnal_amplitude=1.5)
+
+    def test_trace_kind_skips_rate_and_duration_checks(self):
+        # trace replay owns its own timeline; rate/duration don't apply
+        WorkloadSpec(kind="trace", rate=0.0, duration_s=60.0,
+                     trace_path="x.jsonl")
+
+
+# ---- burst/ramp degenerate cases (satellite b) -----------------------------
+class TestDegenerateKinds:
+    def test_burst_fraction_zero_is_poisson(self):
+        burst = generate(WorkloadSpec(kind="burst", rate=40.0,
+                                      duration_s=5.0, burst_fraction=0.0,
+                                      seed=9))
+        plain = generate(WorkloadSpec(kind="poisson", rate=40.0,
+                                      duration_s=5.0, seed=9))
+        assert burst == plain
+
+    def test_burst_fraction_one_is_poisson_at_burst_rate(self):
+        burst = generate(WorkloadSpec(kind="burst", rate=10.0,
+                                      duration_s=5.0, burst_fraction=1.0,
+                                      burst_factor=4.0, seed=9))
+        plain = generate(WorkloadSpec(kind="poisson", rate=40.0,
+                                      duration_s=5.0, seed=9))
+        assert burst == plain
+
+    def test_single_step_ramp_is_uniform_window_at_min_rate(self):
+        ramp = generate(WorkloadSpec(kind="ramp", duration_s=5.0,
+                                     ramp_min_rate=25.0,
+                                     ramp_max_rate=400.0, ramp_steps=1,
+                                     seed=9))
+        plain = generate(WorkloadSpec(kind="poisson", rate=25.0,
+                                      duration_s=5.0, seed=9))
+        assert ramp == plain
+
+    def test_single_step_sweep_matches_single_step_ramp(self):
+        kw = dict(duration_s=5.0, ramp_min_rate=25.0, ramp_max_rate=400.0,
+                  ramp_steps=1, seed=9)
+        assert generate(WorkloadSpec(kind="sweep", **kw)) \
+            == generate(WorkloadSpec(kind="ramp", **kw))
+
+
+# ---- scenario profiles (tentpole 1 + satellite c) --------------------------
+class TestProfiles:
+    def test_required_catalog(self):
+        names = list_profiles()
+        for required in ("chat", "code-generation", "summarization",
+                        "classification", "rag-long-context"):
+            assert required in names
+        table = catalog_table()
+        for name in names:
+            assert name in table
+
+    def test_unknown_profile_lists_known(self):
+        with pytest.raises(ValueError, match="chat"):
+            get_profile("no-such-scenario")
+
+    def test_register_rejects_duplicates(self):
+        prof = ScenarioProfile(name="chat", description="dup",
+                               prompt_tokens=1)
+        with pytest.raises(ValueError, match="already registered"):
+            register_profile(prof)
+
+    @pytest.mark.parametrize("name", ["chat", "code-generation",
+                                      "summarization", "classification",
+                                      "rag-long-context"])
+    def test_one_config_line_resolves(self, name):
+        spec = spec_from_dict({
+            "job_id": f"s-{name}", "model": {"name": "gemma2-2b"},
+            "scenario": name,
+            "workload": {"rate": 5.0, "duration_s": 3.0, "seed": 4}})
+        prof = get_profile(name)
+        assert spec.workload.prompt_tokens == prof.prompt_tokens
+        assert spec.workload.output_tokens == prof.output_tokens
+        assert spec.workload.session_count == prof.session_count
+        assert spec.workload.prefix_tokens == prof.prefix_tokens
+        for field, slo in prof.slos().items():
+            assert getattr(spec, field) == slo
+        # at least one SLO so the profile is benchmarkable out of the box
+        assert any(v is not None for v in prof.slos().values())
+        # explicit rate survived the profile
+        assert spec.workload.rate == 5.0
+
+    def test_round_trip_is_stable_and_deterministic(self):
+        spec = spec_from_dict({
+            "job_id": "rt", "model": {"name": "gemma2-2b"},
+            "scenario": "chat",
+            "workload": {"rate": 5.0, "duration_s": 3.0, "seed": 4}})
+        d = spec.to_dict()
+        again = BenchmarkJobSpec.from_dict(json.loads(json.dumps(d)))
+        assert again == spec and again.to_dict() == d
+        reqs = generate(spec.workload)
+        assert reqs == generate(again.workload)
+        assert len(reqs) > 0
+
+    def test_explicit_fields_beat_profile(self):
+        spec = spec_from_dict({
+            "job_id": "win", "model": {"name": "gemma2-2b"},
+            "scenario": "chat", "slo_ttft_s": 9.0,
+            "workload": {"rate": 5.0, "duration_s": 3.0,
+                         "prompt_tokens": 333, "prompt_tokens_max": 2000}})
+        assert spec.workload.prompt_tokens == 333
+        assert spec.workload.prompt_tokens_max == 2000
+        assert spec.slo_ttft_s == 9.0
+        # untouched fields still come from the profile
+        assert spec.slo_tpot_s == get_profile("chat").slo_tpot_s
+
+    def test_profile_fits_model_context(self):
+        max_len = get_config("gemma2-2b").max_seq_len
+        for name in list_profiles():
+            prof = get_profile(name)
+            assert max(prof.prompt_tokens, prof.prompt_tokens_max) \
+                + 1 <= max_len, name
+
+    def test_session_runs_scenario_and_records_it(self, tmp_path):
+        session = BenchmarkSession(n_workers=1,
+                                   db=PerfDB(tmp_path / "perf.jsonl"))
+        session.submit({"job_id": "e2e-chat",
+                        "model": {"name": "gemma2-2b"}, "chips": 4,
+                        "scenario": "chat",
+                        "workload": {"rate": 4.0, "duration_s": 3.0,
+                                     "seed": 2}})
+        (result,) = session.run()
+        assert result.metric("throughput_rps") > 0
+        rec = result.to_record()
+        assert rec["scenario"] == "chat"
+        back = JobResult.from_record(rec)
+        assert back.spec == result.spec
+        assert back.spec.scenario == "chat"
+        # and the PerfDB row on disk carries it too
+        (row,) = [json.loads(l) for l in
+                  (tmp_path / "perf.jsonl").read_text().splitlines()]
+        assert row["scenario"] == "chat"
+
+
+# ---- arrival processes (tentpole 2) ----------------------------------------
+class TestArrivals:
+    def test_diurnal_peak_beats_trough(self):
+        wl = WorkloadSpec(kind="diurnal", rate=60.0, duration_s=40.0,
+                          diurnal_period_s=40.0, diurnal_amplitude=0.9,
+                          seed=1)
+        reqs = generate(wl)
+        # sin peak at t=10 (quarter period), trough at t=30
+        peak = sum(5.0 <= r.arrival_s < 15.0 for r in reqs)
+        trough = sum(25.0 <= r.arrival_s < 35.0 for r in reqs)
+        assert peak > 2 * trough
+
+    def test_diurnal_mean_rate_matches_empirical(self):
+        wl = WorkloadSpec(kind="diurnal", rate=50.0, duration_s=60.0,
+                          diurnal_period_s=15.0, seed=3)
+        reqs = generate(wl)
+        empirical = len(reqs) / wl.duration_s
+        assert arrivals.mean_rate(wl) == pytest.approx(empirical, rel=0.1)
+
+    def test_flash_crowd_spikes_then_decays(self):
+        wl = WorkloadSpec(kind="flash-crowd", rate=20.0, duration_s=30.0,
+                          burst_factor=8.0, flash_start_s=10.0,
+                          flash_decay_s=3.0, seed=5)
+        reqs = generate(wl)
+        before = sum(r.arrival_s < 10.0 for r in reqs) / 10.0
+        spike = sum(10.0 <= r.arrival_s < 13.0 for r in reqs) / 3.0
+        tail = sum(25.0 <= r.arrival_s for r in reqs) / 5.0
+        assert spike > 3 * before          # the spike is a real spike
+        assert tail < 2 * before           # and it decays back to baseline
+        assert arrivals.mean_rate(wl) == pytest.approx(
+            len(reqs) / wl.duration_s, rel=0.15)
+
+    def test_flash_sentinels_resolve_to_window_fractions(self):
+        wl = WorkloadSpec(kind="flash-crowd", rate=5.0, duration_s=30.0)
+        assert arrivals.flash_params(wl) == (10.0, 3.0)
+
+    def test_sweep_ladder_is_geometric(self):
+        wl = WorkloadSpec(kind="sweep", duration_s=8.0, ramp_min_rate=10.0,
+                          ramp_max_rate=160.0, ramp_steps=5)
+        rates = arrivals.sweep_step_rates(wl)
+        assert rates[0] == pytest.approx(10.0)
+        assert rates[-1] == pytest.approx(160.0)
+        ratios = [b / a for a, b in zip(rates, rates[1:])]
+        assert all(r == pytest.approx(2.0) for r in ratios)
+
+    def test_sweep_load_increases_per_step(self):
+        wl = WorkloadSpec(kind="sweep", duration_s=8.0, ramp_min_rate=20.0,
+                          ramp_max_rate=320.0, ramp_steps=4, seed=7)
+        reqs = generate(wl)
+        step = wl.duration_s / wl.ramp_steps
+        counts = [sum(k * step <= r.arrival_s < (k + 1) * step
+                      for r in reqs) for k in range(wl.ramp_steps)]
+        assert counts == sorted(counts) and counts[-1] > 4 * counts[0]
+
+    def test_mean_rate_steady_kinds(self):
+        assert arrivals.mean_rate(WorkloadSpec(rate=12.0)) == 12.0
+        burst = WorkloadSpec(kind="burst", rate=10.0, burst_factor=5.0,
+                             burst_fraction=0.5)
+        assert arrivals.mean_rate(burst) == pytest.approx(30.0)
+
+    def test_deterministic_per_seed(self):
+        for kind in ("diurnal", "flash-crowd", "sweep"):
+            wl = WorkloadSpec(kind=kind, rate=30.0, duration_s=6.0, seed=11)
+            assert generate(wl) == generate(wl)
+            bumped = generate(WorkloadSpec(kind=kind, rate=30.0,
+                                           duration_s=6.0, seed=12))
+            assert bumped != generate(wl)
+
+
+# ---- multi-tenant traffic (tentpole 3) -------------------------------------
+class TestTenants:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="non-empty name"):
+            TenantSpec(name="")
+        with pytest.raises(ValueError, match="share > 0"):
+            TenantSpec(name="t", share=0.0)
+        with pytest.raises(ValueError, match="unknown"):
+            TenantSpec(name="t", scenario="no-such-profile")
+        with pytest.raises(ValueError, match="duplicate"):
+            WorkloadSpec(rate=5.0, tenants=({"name": "a"}, {"name": "a"}))
+        for kind in ("closed", "trace"):
+            wl = WorkloadSpec(kind=kind, rate=5.0, trace_path="x.jsonl",
+                              tenants=TENANTS)
+            with pytest.raises(ValueError, match="multi-tenant"):
+                generate(wl)
+
+    def test_generate_tags_and_splits_shares(self):
+        wl = WorkloadSpec(rate=40.0, duration_s=10.0, seed=7,
+                          tenants=TENANTS)
+        reqs = generate(wl)
+        assert [r.req_id for r in reqs] == list(range(len(reqs)))
+        assert all(a.arrival_s <= b.arrival_s
+                   for a, b in zip(reqs, reqs[1:]))
+        counts = {t: sum(r.tenant == t for r in reqs)
+                  for t in ("chatbot", "classifier")}
+        assert set(counts) == {"chatbot", "classifier"}
+        assert counts["chatbot"] + counts["classifier"] == len(reqs)
+        # 3:1 share split, generous statistical tolerance
+        assert 1.8 < counts["chatbot"] / counts["classifier"] < 4.5
+        # per-tenant profiles shaped the slices
+        chat_prompts = {r.prompt_tokens for r in reqs
+                        if r.tenant == "chatbot"}
+        cls_out = {r.output_tokens for r in reqs
+                   if r.tenant == "classifier"}
+        assert min(chat_prompts) >= 256 and cls_out == {1}
+        # disjoint session-id ranges: affinity/prefix never alias
+        chat_sids = {r.session_id for r in reqs if r.tenant == "chatbot"}
+        cls_sids = {r.session_id for r in reqs if r.tenant == "classifier"}
+        assert not (chat_sids & cls_sids)
+
+    def test_absolute_rate_overrides_share(self):
+        wl = WorkloadSpec(rate=10.0, duration_s=10.0, seed=3,
+                          tenants=({"name": "fixed", "rate": 30.0},
+                                   {"name": "rest", "share": 1.0}))
+        reqs = generate(wl)
+        fixed = sum(r.tenant == "fixed" for r in reqs) / wl.duration_s
+        assert fixed == pytest.approx(30.0, rel=0.2)
+
+    def test_resolved_slos_fall_back_to_profile(self):
+        own = TenantSpec(name="a", scenario="chat", slo_ttft_s=2.0)
+        slos = resolve_tenant_slos(own)
+        assert slos["slo_ttft_s"] == 2.0                   # own field wins
+        assert slos["slo_tpot_s"] == get_profile("chat").slo_tpot_s
+
+    def test_jain_index(self):
+        assert jain_index([5.0, 5.0, 5.0]) == pytest.approx(1.0)
+        assert jain_index([1.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+        assert jain_index([]) == 0.0
+        assert jain_index([0.0, 0.0]) == 0.0
+
+    def test_sim_slices_and_report(self, lat):
+        wl = WorkloadSpec(rate=20.0, duration_s=8.0, seed=7,
+                          tenants=TENANTS)
+        res = _sim(wl, lat)
+        assert res.tenants() == ["chatbot", "classifier"]
+        sub = res.tenant_result("chatbot")
+        assert sub.traces and all(t.request.tenant == "chatbot"
+                                  for t in sub.traces)
+        report = tenant_report(res, wl.tenants)
+        per = report["per_tenant"]
+        assert set(per) == {"chatbot", "classifier"}
+        total = sum(p["requests"] for p in per.values())
+        assert total == len(res.traces)
+        assert 0.0 < report["fairness_index"] <= 1.0
+        assert report["worst_tenant"] in per
+        assert report["worst_tenant_attainment"] == \
+            min(p["slo_attainment"] for p in per.values())
+        assert "fairness=" in tenant_table(report)
+
+    def test_session_reports_tenants(self, tmp_path):
+        session = BenchmarkSession(n_workers=1,
+                                   db=PerfDB(tmp_path / "perf.jsonl"))
+        session.submit({"job_id": "mt", "model": {"name": "gemma2-2b"},
+                        "chips": 4, "slo_latency_s": 2.0,
+                        "workload": {"rate": 10.0, "duration_s": 5.0,
+                                     "seed": 3,
+                                     "tenants": list(TENANTS)}})
+        (result,) = session.run()
+        rep = result.metrics["tenants"]
+        assert set(rep["per_tenant"]) == {"chatbot", "classifier"}
+        assert 0.0 < rep["fairness_index"] <= 1.0
+        # the workload (tenants included) round-trips through the record
+        back = JobResult.from_record(result.to_record())
+        assert back.spec.workload == result.spec.workload
+
+
+# ---- tenant-aware capacity planning ----------------------------------------
+class TestPlannerTenants:
+    def test_plan_and_reverify_best(self, lat):
+        base = WorkloadSpec(rate=16.0, duration_s=6.0, seed=11)
+        plan = plan_capacity(lat, base, tenants=TENANTS, slo_target=0.9,
+                             replicas=(1, 2), policies=("continuous",),
+                             max_batch=16)
+        best = plan.best
+        assert best is not None
+        feasible = [c for c in plan.candidates if c.meets_slo]
+        assert best.objective == min(c.objective for c in feasible)
+        assert 0.0 < best.metrics["fairness_index"] <= 1.0
+        assert set(best.metrics["tenants"]) == {"chatbot", "classifier"}
+        # independently re-simulate the winning config: every tenant must
+        # hit its own SLOs at the target (plan → verify)
+        res = simulate_candidate(lat, base, best, tenants=TENANTS)
+        rep = tenant_report(res, TENANTS)
+        assert rep["worst_tenant_attainment"] == \
+            pytest.approx(best.metrics["slo_attainment"])
+        for name, per in rep["per_tenant"].items():
+            assert per["slo_attainment"] >= 0.9, name
+
+    def test_tenant_without_any_slo_rejected(self, lat):
+        with pytest.raises(ValueError, match="resolves no SLO"):
+            plan_capacity(lat, WorkloadSpec(rate=4.0, duration_s=3.0),
+                          tenants=({"name": "bare"},))
+
+    def test_plain_plan_still_requires_slo(self, lat):
+        with pytest.raises(ValueError, match="at least one SLO"):
+            plan_capacity(lat, WorkloadSpec(rate=4.0, duration_s=3.0))
+
+
+# ---- synthetic trace scaling (tentpole 4) ----------------------------------
+class TestSynth:
+    def test_errors(self):
+        with pytest.raises(ValueError, match="at least 2"):
+            scale_trace([{"arrival_s": 0.0}], 10.0)
+        with pytest.raises(ValueError, match="factor"):
+            scale_trace(SEED_TRACE, 0.0)
+
+    def test_100x_preserves_shape(self):
+        # the acceptance bar: 100× volume, interarrival CV within 20%,
+        # session-length p50/p95 within 15%
+        s0 = trace_stats(SEED_TRACE)
+        assert s0["interarrival_cv"] > 1.1   # the seed is genuinely bursty
+        big = scale_trace(SEED_TRACE, 100.0, seed_rng=1)
+        s1 = trace_stats(big)
+        assert s1["requests"] == pytest.approx(100 * s0["requests"])
+        assert abs(s1["interarrival_cv"] - s0["interarrival_cv"]) \
+            <= 0.20 * s0["interarrival_cv"]
+        for q in ("session_len_p50", "session_len_p95"):
+            assert abs(s1[q] - s0[q]) <= 0.15 * s0[q]
+        # same wall window (rate went up 100×, duration did not)
+        assert s1["duration_s"] == pytest.approx(s0["duration_s"], rel=0.3)
+        assert s1["mean_prompt_tokens"] == pytest.approx(
+            s0["mean_prompt_tokens"], rel=0.1)
+
+    def test_deterministic_and_sorted(self):
+        a = scale_trace(SEED_TRACE, 5.0, seed_rng=3)
+        assert a == scale_trace(SEED_TRACE, 5.0, seed_rng=3)
+        assert a != scale_trace(SEED_TRACE, 5.0, seed_rng=4)
+        times = [r["arrival_s"] for r in a]
+        assert times == sorted(times)
+
+    def test_sessions_keep_prefix_structure(self):
+        out = scale_trace(SEED_TRACE, 3.0, seed_rng=2)
+        by_sid = {}
+        for r in out:
+            by_sid.setdefault(r["session_id"], []).append(r)
+        for sid, rows in by_sid.items():
+            # a cloned session keeps one shared prefix, like its template
+            assert len({r["prefix_tokens"] for r in rows}) == 1
+        seed_stats = trace_stats(SEED_TRACE)
+        assert np.mean([r["prefix_tokens"] for r in out]) == pytest.approx(
+            seed_stats["mean_prefix_tokens"], rel=0.25)
+
+    def test_scaled_trace_replays(self, tmp_path, lat):
+        out = scale_trace(SEED_TRACE, 2.0, seed_rng=5)
+        path = write_trace_rows(out, tmp_path / "scaled.jsonl",
+                                header="scaled 2x for replay test")
+        wl = WorkloadSpec(kind="trace", trace_path=str(path))
+        reqs = generate(wl)
+        assert len(reqs) == len(out)
+        res = _sim(wl, lat)
+        assert len(res.traces) == len(reqs)
+
+    def test_downscale(self):
+        small = scale_trace(SEED_TRACE, 0.25, seed_rng=6)
+        s0 = trace_stats(SEED_TRACE)
+        assert len(small) == pytest.approx(0.25 * s0["requests"], abs=1)
