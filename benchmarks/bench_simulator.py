@@ -1,0 +1,119 @@
+"""Simulator throughput: events/sec of the discrete-event core itself.
+
+The cluster simulator is the instrument every serving benchmark in this
+repo reads from, so its own speed bounds how much configuration space a
+sweep can cover.  This bench wall-clocks the indexed event loop on a
+cluster-scale scenario — 16 continuous-batching replicas behind a
+least-loaded router at an offered rate that generates >=50k requests in
+the full run — and reports:
+
+  sim_events_per_sec — engine iterations + arrival/migration pops per
+                       wall-clock second (the headline; wall-clocked, so
+                       the CI baseline carries a wide tolerance);
+  events / n_requests / throughput_rps / p99_s — deterministic given the
+                       seed (tight tolerance: they catch semantic drift,
+                       not machine noise).
+
+Two sections: (a) full trace recording (the default), and (b)
+``trace_sample=0.1`` — per-request stage accounting kept for a 10%
+deterministic hash-sample while aggregate throughput/served counts stay
+exact; the bench asserts that equivalence.
+
+``--smoke`` shrinks the workload window for CI (same 16-replica
+topology); ``--json PATH`` writes the metrics dict for the
+perf-regression lane.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+# allow `python benchmarks/bench_simulator.py` (script dir is on
+# sys.path, repo root is not)
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.configs import get_config
+from repro.serving.batching import make_policy
+from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.latency_model import LatencyModel
+from repro.serving.workload import WorkloadSpec
+
+from benchmarks.common import dump_json, emit, save_json, timed
+
+MODEL = "gemma2-2b"
+CHIPS = 4
+RATE_RPS = 3200.0
+REPLICAS = 16
+SEED = 42
+
+
+def _scenario(smoke: bool):
+    wl = WorkloadSpec(rate=RATE_RPS, duration_s=2.0 if smoke else 16.0,
+                      seed=SEED)
+    cluster = ClusterSpec(replicas=REPLICAS, router="least-loaded")
+    policy = lambda: make_policy("continuous", max_batch=16, max_prefill=8)
+    return wl, policy, cluster
+
+
+def run(smoke: bool = False, json_path: str | None = None) -> None:
+    lm = LatencyModel(get_config(MODEL), chips=CHIPS)
+    wl, policy, cluster = _scenario(smoke)
+    out = {}
+
+    # (a) full per-request trace recording
+    res, us = timed(simulate_cluster, wl, policy(), lm, cluster=cluster)
+    wall = us / 1e6
+    eps = res.events / wall
+    s = res.summary()
+    out["full"] = {
+        "sim_events_per_sec": eps,
+        "events": res.events,
+        "n_requests": len(res.traces),
+        "throughput_rps": s["throughput_rps"],
+        "p99_s": s["p99_s"],
+        "wall_s": wall,
+    }
+    emit("sim.full", us,
+         f"events={res.events};ev_per_s={eps/1e3:.1f}k;"
+         f"n={len(res.traces)};thr={s['throughput_rps']:.0f}rps;"
+         f"p99={s['p99_s']*1e3:.0f}ms")
+
+    # (b) sampled stage accounting: aggregates must match the full run
+    res_s, us_s = timed(simulate_cluster, wl, policy(), lm,
+                        cluster=cluster, trace_sample=0.1)
+    wall_s = us_s / 1e6
+    out["sampled"] = {
+        "sim_events_per_sec": res_s.events / wall_s,
+        "requests_served": res_s.requests_served,
+        "traces_kept": len(res_s.traces),
+        "throughput_rps": res_s.summary()["throughput_rps"],
+        "wall_s": wall_s,
+    }
+    emit("sim.sampled", us_s,
+         f"served={res_s.requests_served};"
+         f"kept={len(res_s.traces)};"
+         f"ev_per_s={res_s.events/wall_s/1e3:.1f}k")
+    assert res_s.requests_served == len(res.traces), \
+        (f"sampling changed the served count: "
+         f"{res_s.requests_served} != {len(res.traces)}")
+    assert res_s.events == res.events, \
+        f"sampling changed the event count: {res_s.events} != {res.events}"
+    emit("sim.finding.sampling_exact_aggregates", 0.0,
+         f"served_match=True;events_match=True;"
+         f"kept_fraction={len(res_s.traces)/max(res_s.requests_served, 1):.3f}")
+
+    save_json("simulator_fastpath", out)
+    if json_path:
+        dump_json(json_path, out)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short workload window for CI (same topology)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the metrics dict to PATH "
+                         "(perf-regression lane input)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=args.json)

@@ -1,7 +1,10 @@
 """Perf-regression gate for the ``bench-regression`` CI lane.
 
 Compares the JSON metric dumps produced by ``bench_cluster.py --json`` /
-``bench_calibrate.py --json`` against a committed baseline
+``bench_calibrate.py --json`` / ``bench_simulator.py --json`` (the
+``sim`` namespace: event-loop throughput, where ``sim_events_per_sec``
+is wall-clocked and carries a wide tolerance while the event/request
+counts are seed-deterministic) against a committed baseline
 (``benchmarks/baselines/ci_baseline.json``), prints a delta table, and
 exits non-zero when any metric regressed beyond its tolerance.
 

@@ -26,7 +26,7 @@ from typing import List, Optional, Sequence, Tuple
 from repro.serving.workload import Request
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class QueuedRequest:
     request: Request
     enqueue_s: float

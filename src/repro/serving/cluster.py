@@ -130,14 +130,33 @@ class Router:
 
 
 class RoundRobinRouter(Router):
+    """Rotation over stable ``replica_id``s, skip-based.
+
+    Each arrival goes to the lowest live ``replica_id`` greater than the
+    previously chosen one (wrapping to the lowest).  The old
+    implementation applied a global counter mod the *filtered* ready
+    list, so an autoscaler add/retire — or a replica merely finishing
+    its cold start — shifted every subsequent assignment and skewed the
+    distribution (the same churn bug the affinity router had).  Skipping
+    over missing ids keeps the rotation anchored to replica identity:
+    membership changes only affect the replicas that actually changed.
+    """
     name = "round-robin"
 
     def __init__(self):
-        self._i = 0
+        self._last_id = -1
 
     def route(self, request, engines, now):
-        idx = self._i % len(engines)
-        self._i += 1
+        nxt = wrap = None
+        for i, e in enumerate(engines):
+            rid = e.replica_id
+            if rid > self._last_id and (
+                    nxt is None or rid < engines[nxt].replica_id):
+                nxt = i
+            if wrap is None or rid < engines[wrap].replica_id:
+                wrap = i
+        idx = nxt if nxt is not None else wrap
+        self._last_id = engines[idx].replica_id
         return idx
 
 
@@ -146,8 +165,22 @@ class LeastLoadedRouter(Router):
     name = "least-loaded"
 
     def route(self, request, engines, now):
-        return min(range(len(engines)),
-                   key=lambda i: (engines[i].load(now), i))
+        # explicit scan (first minimum wins, same tie-break as the old
+        # min-with-key) — this runs once per arrival over every live
+        # replica, so the continuous-engine load signal (queued +
+        # running, exactly ``ReplicaEngine.load``) is inlined rather
+        # than paying a method call per engine
+        best = 0
+        e = engines[0]
+        best_load = len(e.queue) + len(e.active) if e.continuous \
+            else e.load(now)
+        for i in range(1, len(engines)):
+            e = engines[i]
+            load = len(e.queue) + len(e.active) if e.continuous \
+                else e.load(now)
+            if load < best_load:
+                best, best_load = i, load
+        return best
 
 
 _MASK64 = (1 << 64) - 1
@@ -257,6 +290,16 @@ def _resolve_cluster_memory(cluster: ClusterSpec, policy: BatchPolicy,
     for r in requests:
         out = r.output_tokens
         if continuous:
+            if r.prompt_tokens >= resolved.max_model_len:
+                # previously clamped to a 1-token sentinel, silently
+                # validating a sequence the engine would then decode
+                # past the context limit
+                raise KVBudgetError(
+                    f"request {r.req_id}: prompt of {r.prompt_tokens} "
+                    f"tokens leaves no room to decode within "
+                    f"max_model_len={resolved.max_model_len}; raise "
+                    "MemorySpec.max_model_len or shrink the workload's "
+                    "prompts")
             out = max(1, min(out, resolved.max_model_len - r.prompt_tokens))
         worst = max(worst, r.prompt_tokens + out)
     bt = cluster.memory.block_tokens
@@ -275,7 +318,8 @@ def _resolve_cluster_memory(cluster: ClusterSpec, policy: BatchPolicy,
 def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
                      latency: LatencyModel, *,
                      cluster: ClusterSpec = ClusterSpec(),
-                     network: NetworkModel = NETWORKS["lan"]) -> SimResult:
+                     network: NetworkModel = NETWORKS["lan"],
+                     trace_sample: float = 1.0) -> SimResult:
     """Drive a cluster of replicas over a workload; returns a SimResult
     whose utilization accounts for the peak replica count and whose
     energy/cost bill the integrated live replica-seconds.
@@ -290,6 +334,14 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
     pool, completions there (= first token) trigger a KV handoff over the
     disaggregation's ``kv_network``, and the decode pool finishes the
     generation with the migrated KV already resident.
+
+    ``trace_sample`` < 1 keeps full per-request trace recording (stage
+    accounting, per-iteration batch sizes) for only that deterministic
+    fraction of requests and drops the rest from ``SimResult.traces``.
+    Counting aggregates — throughput, duration, utilization, cost, the
+    memory/pool dicts and ``requests_served`` — remain exact over *all*
+    requests; percentile metrics are computed over the sample.  Use it
+    for aggregate-only sweeps at production scale.
     """
     disagg = cluster.disaggregation
     if disagg is not None and not isinstance(policy, ContinuousBatcher):
@@ -297,6 +349,13 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
             "disaggregated serving needs the continuous batcher "
             f"(got {policy.name!r}): request-level policies have no "
             "decode loop to migrate into")
+    if not 0.0 < trace_sample <= 1.0:
+        raise ValueError(f"trace_sample must be in (0, 1], got "
+                         f"{trace_sample}")
+    sampling = trace_sample < 1.0
+    # deterministic per-request coin flip (splitmix64 of req_id): the
+    # same requests are sampled across runs and processes
+    sample_cut = int(trace_sample * float(_MASK64 + 1))
     requests = generate(workload)
     closed_loop = workload.kind == CLOSED
     traces: Dict[int, RequestTrace] = {}
@@ -305,6 +364,8 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
     def admit(r: Request) -> None:
         tr = RequestTrace(request=r, t_preprocess=PRE_PROCESS_S,
                           t_transmit=network.transmit(r.payload_bytes))
+        if sampling:
+            tr.detail = _rendezvous_weight(r.req_id, 0x7ACE) < sample_cut
         traces[r.req_id] = tr
         heapq.heappush(arrivals,
                        (r.arrival_s + tr.t_preprocess + tr.t_transmit,
@@ -320,6 +381,18 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
     # 32k-token sentinel far past max_seq_len
     max_len = resolved.max_model_len if resolved is not None \
         else getattr(getattr(latency, "cfg", None), "max_seq_len", 0)
+    if max_len:
+        over = next((r for r in requests if r.prompt_tokens >= max_len),
+                    None)
+        if over is not None:
+            # clamped_output_tokens would otherwise floor the budget at 1
+            # and decode a token past the context limit
+            raise ValueError(
+                f"request {over.req_id}: prompt of {over.prompt_tokens} "
+                f"tokens is at/over the model context limit "
+                f"(max_model_len={max_len}) — no output token fits; "
+                "shrink the workload's prompts or raise the context "
+                "limit")
 
     def _kv():
         return KVCacheManager(cluster.memory, resolved) \
@@ -369,50 +442,101 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
     next_scale = cluster.scale_interval_s
     peak = len(engines)
 
-    now = 0.0
-    while True:
-        candidates = []
-        if arrivals:
-            candidates.append(arrivals[0][0])
-        if migrations:
-            candidates.append(migrations[0][0])
-        for e in engines:
-            t = e.next_action_s(now)
-            if t is not None:
-                candidates.append(t)
-        if not candidates:
-            break
-        if scaler is not None:      # only re-evaluate while work remains
-            candidates.append(next_scale)
-        now = max(now, min(candidates))
+    # ---- indexed event scheduler -----------------------------------------
+    # Per-engine next-event times live in a lazy-deletion heap instead of
+    # being rescanned across all replicas on every pass: entries are
+    # (t, engine_idx, version) and an entry is live iff its version
+    # matches the engine's current one (``evers``) — every reschedule
+    # bumps the version, staling out old entries in O(1).  Only engines
+    # whose entry is due at ``now`` act; an engine's next-event time can
+    # only change when its own state changes (an enqueue or its own act),
+    # so everything else is provably a no-op and is skipped.  Engine list
+    # position == replica_id (the autoscaler appends with len(engines)),
+    # which lets routed targets be rescheduled by id.
+    eheap: List[Tuple[float, int, int]] = []
+    evers: List[int] = [0] * len(engines)
 
-        while arrivals and arrivals[0][0] <= now + EPS:
-            t_arr, _, r = heapq.heappop(arrivals)
-            pool = prefill_engines if disagg is not None else engines
-            live = [e for e in pool if not e.retired]
+    def schedule(i: int, t_now: float) -> None:
+        evers[i] += 1
+        t = engines[i].next_action_s(t_now)
+        if t is not None:
+            heapq.heappush(eheap, (t, i, evers[i]))
+
+    route_pool = prefill_engines if disagg is not None else engines
+
+    def live_engines() -> List[ReplicaEngine]:
+        return [e for e in route_pool if not e.retired]
+
+    for i in range(len(engines)):
+        schedule(i, 0.0)
+    # the live routing set only changes on autoscaler steps — maintain it
+    # across passes instead of refiltering per arrival
+    live = live_engines()
+    events = 0
+    now = 0.0
+    inf = float("inf")
+    while True:
+        while eheap and eheap[0][2] != evers[eheap[0][1]]:
+            heapq.heappop(eheap)            # stale (rescheduled) entries
+        t_next = arrivals[0][0] if arrivals else inf
+        if migrations and migrations[0][0] < t_next:
+            t_next = migrations[0][0]
+        if eheap and eheap[0][0] < t_next:
+            t_next = eheap[0][0]
+        if t_next == inf:
+            break
+        if scaler is not None and next_scale < t_next:
+            t_next = next_scale     # only re-evaluate while work remains
+        if t_next > now:
+            now = t_next
+
+        if arrivals and arrivals[0][0] <= now + EPS:
             # prefer replicas already past cold start; a still-spawning
             # replica only takes traffic if no warm replica exists
+            # (retired/spawn states are fixed within a pass, so the ready
+            # set is computed once per drain)
             ready = [e for e in live if e.spawn_s <= now + EPS] or live
-            ready[router.route(r, ready, now)].enqueue(
-                QueuedRequest(request=r, enqueue_s=t_arr))
+            touched = set()
+            while arrivals and arrivals[0][0] <= now + EPS:
+                t_arr, _, r = heapq.heappop(arrivals)
+                events += 1
+                e = ready[router.route(r, ready, now)]
+                e.enqueue(QueuedRequest(request=r, enqueue_s=t_arr))
+                touched.add(e.replica_id)
+            for i in touched:
+                schedule(i, now)
 
         # KV handoffs whose transfer finished join the decode pool with
         # their cache already resident (first token was already emitted)
         while migrations and migrations[0][0] <= now + EPS:
             t_ready, _, r = heapq.heappop(migrations)
+            events += 1
             out = clamped_output_tokens(r, max_len)
-            decode_engines[decode_router.route(r, decode_engines,
-                                               now)].enqueue(
-                QueuedRequest(request=r, enqueue_s=t_ready,
-                              remaining=out - 1, migrated=True))
+            e = decode_engines[decode_router.route(r, decode_engines, now)]
+            e.enqueue(QueuedRequest(request=r, enqueue_s=t_ready,
+                                    remaining=out - 1, migrated=True))
+            schedule(e.replica_id, now)
 
         if scaler is not None and now + EPS >= next_scale:
+            n_before = len(engines)
             scaler.step(engines, now)
             peak = max(peak, sum(1 for e in engines if not e.retired))
             while next_scale <= now + EPS:
                 next_scale += cluster.scale_interval_s
+            for i in range(n_before, len(engines)):
+                evers.append(0)
+                schedule(i, now)    # spawned replica enters the heap
+            live = live_engines()   # membership changed (add/retire)
 
-        for e in engines:
+        due = []
+        while eheap and eheap[0][0] <= now + EPS:
+            t, i, ver = heapq.heappop(eheap)
+            if ver == evers[i]:
+                due.append(i)
+        due.sort()                  # act in replica order (determinism)
+        for i in due:
+            e = engines[i]
+            events += 1
             for done_s, r in e.act(now, traces):
                 if e.role == "prefill" \
                         and clamped_output_tokens(r, max_len) > 1:
@@ -432,9 +556,13 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
                     admit(dataclasses.replace(r, req_id=next_id,
                                               arrival_s=done_s))
                     next_id += 1
+            schedule(i, now)
 
     done = [t for t in traces.values() if t.done_s > 0]
+    served = len(done)
     last_done = max((t.done_s for t in done), default=0.0)
+    if sampling:
+        done = [t for t in done if t.detail]
     window = 0.0 if workload.kind == TRACE else workload.duration_s
     duration = max(window, last_done)
     # live replica-seconds (spawn→retire spans): what energy/cost bill —
@@ -491,4 +619,6 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         per_replica_busy_s=[e.busy_s for e in engines],
         memory=memory,
         replica_seconds=replica_seconds,
-        pools=pools)
+        pools=pools,
+        requests_served=served,
+        events=events)

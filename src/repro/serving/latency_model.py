@@ -42,22 +42,45 @@ class LatencyOracle:
     def decode_latency(self, batch: int, context: int) -> float:
         raise NotImplementedError
 
+    # a steady-state serving simulation revisits a small set of
+    # (batch, prompt, context) shapes millions of times; latencies are
+    # pure functions of their arguments, so memoize per oracle.  The cap
+    # bounds memory on adversarial workloads (every shape distinct) —
+    # beyond it results are still computed, just not stored.
+    _CACHE_CAP = 1 << 20
+
     def iteration_latency(self, n_prefill: int, prompt: int,
                           n_decode: int, max_context: int) -> float:
         """One continuous-batching engine iteration (Orca-style): prefill
         the requests joining this boundary, then one decode step for the
         whole running batch."""
-        t = 0.0
-        if n_prefill > 0:
-            t += self.prefill_latency(n_prefill, prompt)
-        if n_decode > 0:
-            t += self.decode_latency(n_decode, max(max_context, 1))
+        cache = getattr(self, "_iter_cache", None)
+        if cache is None:
+            cache = self._iter_cache = {}
+        key = (n_prefill, prompt, n_decode, max_context)
+        t = cache.get(key)
+        if t is None:
+            t = 0.0
+            if n_prefill > 0:
+                t += self.prefill_latency(n_prefill, prompt)
+            if n_decode > 0:
+                t += self.decode_latency(n_decode, max(max_context, 1))
+            if len(cache) < self._CACHE_CAP:
+                cache[key] = t
         return t
 
     def request_latency(self, batch: int, prompt: int, out_tokens: int) -> float:
-        t = self.prefill_latency(batch, prompt)
-        for i in range(out_tokens - 1):
-            t += self.decode_latency(batch, prompt + i)
+        cache = getattr(self, "_req_cache", None)
+        if cache is None:
+            cache = self._req_cache = {}
+        key = (batch, prompt, out_tokens)
+        t = cache.get(key)
+        if t is None:
+            t = self.prefill_latency(batch, prompt)
+            for i in range(out_tokens - 1):
+                t += self.decode_latency(batch, prompt + i)
+            if len(cache) < self._CACHE_CAP:
+                cache[key] = t
         return t
 
 
@@ -76,11 +99,26 @@ class LatencyModel(LatencyOracle):
         self.n_params = count_params(param_shapes(build_model(self.cfg)))
         if self.int8:
             self.serve_bytes_per_param = 1.0
+        # per-model constants the simulator's hot path would otherwise
+        # re-derive on every engine iteration (layer_kinds() builds a
+        # fresh tuple per call); values and accumulation order are
+        # unchanged, so latencies stay bit-identical
+        kinds = self.cfg.layer_kinds()
+        self._attn_kinds = tuple(k for k in kinds
+                                 if k in ("attn_global", "attn_local"))
+        self._n_attn = sum(k.startswith("attn") for k in kinds)
+        self._weight_bytes = self.n_params * self.serve_bytes_per_param
 
     # ---- analytic per-phase latencies -----------------------------------
     def _kv_bytes_per_token(self) -> float:
-        from repro.analysis.memory_model import kv_bytes_per_token
-        return kv_bytes_per_token(self.cfg)
+        # decode_latency calls this once per engine iteration — memoize
+        # the (deterministic) model-config derivation instead of paying a
+        # module import + recompute on the simulator's hot path
+        v = getattr(self, "_kv_bpt", None)
+        if v is None:
+            from repro.analysis.memory_model import kv_bytes_per_token
+            v = self._kv_bpt = kv_bytes_per_token(self.cfg)
+        return v
 
     # ---- memory-subsystem hooks (repro.serving.memory) -------------------
     def kv_bytes_per_token(self) -> float:
@@ -95,18 +133,15 @@ class LatencyModel(LatencyOracle):
         cfg = self.cfg
         flops = batch * prompt * self.flops_per_token
         # quadratic attention term (windowed layers capped at the window)
-        for kind in cfg.layer_kinds():
+        for kind in self._attn_kinds:
             if kind == "attn_global":
                 span = prompt
-            elif kind == "attn_local":
+            else:                       # attn_local
                 span = min(cfg.local_window or prompt, prompt)
-            else:
-                continue
             flops += 4 * batch * prompt * span * cfg.num_heads * cfg.head_dim / 2
-        weight_bytes = self.n_params * self.serve_bytes_per_param
         act_bytes = 8 * batch * prompt * cfg.d_model * 2.0 * cfg.num_layers
         compute_s = flops / (self.chips * self.hw.peak_flops)
-        memory_s = (weight_bytes / self.chips + act_bytes / self.chips) \
+        memory_s = (self._weight_bytes / self.chips + act_bytes / self.chips) \
             / self.hw.hbm_bw
         return max(compute_s, memory_s) + LAUNCH_OVERHEAD_S
 
@@ -114,16 +149,16 @@ class LatencyModel(LatencyOracle):
         cfg = self.cfg
         flops = batch * self.flops_per_token
         flops += 4 * batch * min(context, 1 << 30) * cfg.num_heads \
-            * cfg.head_dim * sum(k.startswith("attn") for k in cfg.layer_kinds())
-        weight_bytes = self.n_params * self.serve_bytes_per_param
+            * cfg.head_dim * self._n_attn
         kv_bytes = batch * context * self._kv_bytes_per_token()
         compute_s = flops / (self.chips * self.hw.peak_flops)
-        memory_s = (weight_bytes + kv_bytes) / (self.chips * self.hw.hbm_bw)
+        memory_s = (self._weight_bytes + kv_bytes) \
+            / (self.chips * self.hw.hbm_bw)
         return max(compute_s, memory_s) + LAUNCH_OVERHEAD_S
 
     def cold_start(self) -> float:
-        weight_bytes = self.n_params * self.serve_bytes_per_param
-        return COLD_START_CONST_S + weight_bytes / (self.chips * COLD_START_DISK_BW)
+        return COLD_START_CONST_S + self._weight_bytes \
+            / (self.chips * COLD_START_DISK_BW)
 
     def to_profile(self, *, batches=(1, 2, 4, 8, 16),
                    seqs=(32, 64, 128, 256), contexts=None,

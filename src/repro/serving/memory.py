@@ -176,6 +176,10 @@ class KVCacheManager:
         self.max_model_len = resolved.max_model_len
         self.budget_bytes = resolved.budget_bytes
         self.free_blocks = resolved.total_blocks
+        # bumped on every free(): engines compare versions to detect
+        # "KV blocks were released since my admission got blocked", which
+        # re-attributes the wait from batching policy to memory pressure
+        self.version = 0
         self._allocs: Dict[int, _Alloc] = {}
         self._cache: Dict[int, _PrefixEntry] = {}
         # ---- accounting ----
@@ -315,6 +319,7 @@ class KVCacheManager:
         """Release a request's private blocks; its prefix blocks stay
         cached (refs-decremented) for future session hits."""
         self.touch(now)
+        self.version += 1
         a = self._allocs.pop(req_id)
         self.free_blocks += a.private_blocks
         if a.session is not None:

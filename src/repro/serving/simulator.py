@@ -9,11 +9,12 @@ Preferred: whole batches occupy the server) or a ``ContinuousBatcher``
 the running batch at iteration boundaries, clocked by the LatencyModel's
 prefill/decode split).  ``simulate`` runs one replica; a ``Cluster`` of
 replicas behind a router/autoscaler lives in ``repro.serving.cluster``
-and drives the same engines from a shared event loop.
+and drives the same engines from a shared indexed event loop.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -31,16 +32,19 @@ POST_PROCESS_S = 0.0004    # label lookup / detokenize, per request
 EPS = 1e-12
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class RequestTrace:
     request: Request
     t_preprocess: float = 0.0
     t_transmit: float = 0.0
     t_queue: float = 0.0       # enqueue → service start (total wait)
     t_batch_wait: float = 0.0  # the policy-attributable slice of t_queue:
-                               # time waited while capacity was free but the
-                               # batch had not fired / the iteration boundary
-                               # had not been reached
+                               # time waited while capacity (slots *and*
+                               # KV memory) was free but the batch had not
+                               # fired / the iteration boundary had not
+                               # been reached.  Waits caused by a full KV
+                               # cache are memory pressure, not policy,
+                               # and are excluded
     t_inference: float = 0.0
     t_postprocess: float = 0.0
     t_kv_transfer: float = 0.0      # disaggregated serving: prefill→decode
@@ -53,6 +57,10 @@ class RequestTrace:
     tokens_out: int = 0             # tokens actually generated (post-clamp)
     preemptions: int = 0            # KV-pressure evict/recompute cycles
     cached_prompt_tokens: int = 0   # prompt tokens served from prefix cache
+    detail: bool = True             # False → unsampled (trace_sample < 1):
+                                    # engines skip per-iteration stage
+                                    # bookkeeping and the trace is dropped
+                                    # from the result's per-request view
 
     @property
     def e2e(self) -> float:
@@ -96,17 +104,45 @@ class SimResult:
     pools: Optional[Dict[str, object]] = None    # disaggregated prefill/
                                         # decode pool provenance (None when
                                         # colocated)
+    requests_served: int = 0            # completions including unsampled
+                                        # traces (0 → len(traces): full
+                                        # recording, the default)
+    events: int = 0                     # event-loop work units processed
+                                        # (engine acts + arrival/migration
+                                        # pops) — bench_simulator.py's
+                                        # sim-events/sec numerator
+    # percentile/mean metrics re-materialized these arrays on every call
+    # (summary() alone did so ~10×); memoize per result.  init=False so
+    # dataclasses.replace()-based slicing (tenant_result) starts cold.
+    _cache: Dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
 
     # ---- aggregate metrics (the paper's metric collector) ----------------
+    def _served(self) -> int:
+        return self.requests_served or len(self.traces)
+
+    def _sample_scale(self) -> float:
+        """Served-to-recorded ratio: scales counts derived from the
+        sampled traces back to the full population (1.0 when every
+        trace was recorded)."""
+        if self.requests_served and self.traces \
+                and self.requests_served != len(self.traces):
+            return self.requests_served / len(self.traces)
+        return 1.0
+
     def latencies(self) -> np.ndarray:
-        return np.array([t.e2e for t in self.traces])
+        a = self._cache.get("latencies")
+        if a is None:
+            a = np.array([t.e2e for t in self.traces])
+            self._cache["latencies"] = a
+        return a
 
     def percentile(self, p: float) -> float:
         lat = self.latencies()
         return float(np.percentile(lat, p)) if len(lat) else 0.0
 
     def throughput(self) -> float:
-        return len(self.traces) / self.duration_s if self.duration_s else 0.0
+        return self._served() / self.duration_s if self.duration_s else 0.0
 
     def utilization(self) -> float:
         denom = self.duration_s * max(self.replicas, 1)
@@ -120,13 +156,21 @@ class SimResult:
     # ---- phase metrics (TTFT / TPOT / goodput) ---------------------------
     def ttfts(self) -> np.ndarray:
         """Time-to-first-token of every request that emitted one."""
-        return np.array([t.t_first_token for t in self.traces
-                         if t.first_token_s > 0.0])
+        a = self._cache.get("ttfts")
+        if a is None:
+            a = np.array([t.t_first_token for t in self.traces
+                          if t.first_token_s > 0.0])
+            self._cache["ttfts"] = a
+        return a
 
     def tpots(self) -> np.ndarray:
         """Per-token decode time of every request with ≥ 2 tokens
         (single-token requests have no defined inter-token latency)."""
-        return np.array([t.tpot for t in self.traces if t.tokens_out > 1])
+        a = self._cache.get("tpots")
+        if a is None:
+            a = np.array([t.tpot for t in self.traces if t.tokens_out > 1])
+            self._cache["tpots"] = a
+        return a
 
     def ttft(self, p: float = 50.0) -> float:
         """TTFT percentile (median by default)."""
@@ -156,12 +200,14 @@ class SimResult:
                 tpot_slo_s: Optional[float] = None,
                 e2e_slo_s: Optional[float] = None) -> float:
         """Requests/s meeting *every* provided SLO (TTFT and TPOT and,
-        optionally, e2e) — the rate real LLM deployments are judged by."""
+        optionally, e2e) — the rate real LLM deployments are judged by.
+        Under trace sampling the recorded traces' attainment rate is
+        extrapolated to the full served count."""
         if not self.duration_s:
             return 0.0
         n = sum(self._meets_phase_slos(t, ttft_slo_s, tpot_slo_s, e2e_slo_s)
                 for t in self.traces)
-        return n / self.duration_s
+        return n * self._sample_scale() / self.duration_s
 
     def phase_slo_attainment(self, ttft_slo_s: Optional[float] = None,
                              tpot_slo_s: Optional[float] = None,
@@ -198,7 +244,9 @@ class SimResult:
         the fairness/isolation view across all tenants.
         """
         sub = [t for t in self.traces if t.request.tenant == name]
-        return dataclasses.replace(self, traces=sub)
+        # the slice serves exactly its recorded traces (sampling scale
+        # does not survive slicing: per-tenant served counts are unknown)
+        return dataclasses.replace(self, traces=sub, requests_served=0)
 
     def billed_replica_seconds(self) -> float:
         """Replica-seconds energy/cost are billed over: the integrated
@@ -224,7 +272,7 @@ class SimResult:
             * self.chips
 
     def cost_per_1k_requests(self) -> float:
-        n = len(self.traces)
+        n = self._served()
         return self.cost_usd() / n * 1000 if n else 0.0
 
     def stage_means(self) -> Dict[str, float]:
@@ -245,7 +293,7 @@ class SimResult:
 
     def summary(self) -> Dict[str, float]:
         s = {
-            "requests": len(self.traces),
+            "requests": self._served(),
             "throughput_rps": self.throughput(),
             "p50_s": self.percentile(50),
             "p95_s": self.percentile(95),
@@ -275,7 +323,7 @@ class SimResult:
         return s
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _ActiveRequest:
     """A request occupying a decode slot of a continuous engine."""
     qreq: QueuedRequest
@@ -285,12 +333,17 @@ class _ActiveRequest:
     prefill_left: int = 0   # prompt tokens still to chunk-prefill (0 when
                             # the prompt was prefilled whole at join)
     chunk: int = 0          # tokens being prefilled this iteration
+    trace: Optional[RequestTrace] = None    # resolved once at join so the
+                            # per-token hot loop never hits the trace dict
 
 
 def clamped_output_tokens(request: Request, max_model_len: int) -> int:
     """Decode tokens owed, bounded by the model's context limit so
     slot/KV accounting is always finite (``output_tokens_max=None``
-    workloads carry an unbounded-generation sentinel)."""
+    workloads carry an unbounded-generation sentinel).  Prompts at or
+    over ``max_model_len`` are rejected at simulation entry
+    (``simulate_cluster``), so the ≥1 floor never masks a context
+    overrun — it only guards zero-output workloads."""
     out = request.output_tokens
     if max_model_len:
         out = min(out, max_model_len - request.prompt_tokens)
@@ -305,6 +358,9 @@ class ReplicaEngine:
     performs every action due at ``now`` and returns ``(done_s, request)``
     completions (``done_s`` may lie in the future — inference started at
     ``now`` finishes later; completions only feed closed-loop reissue).
+    ``next_action_s`` only changes when the engine's own state changes
+    (an enqueue or its own act), which is what lets the cluster loop index
+    engines in a lazy-deletion heap instead of rescanning all of them.
     """
 
     def __init__(self, replica_id: int, policy: BatchPolicy,
@@ -327,7 +383,10 @@ class ReplicaEngine:
         self.chunk_tokens = chunk_tokens    # 0 → whole-prompt prefill
         self.created_s = created_s          # provisioning time (billing)
         self.retired_s: Optional[float] = None
-        self.queue: List[QueuedRequest] = []
+        # continuous admission pops head / preempts back to head: deque.
+        # Request-level policies slice the queue (queue[:n]), so they
+        # keep a list.
+        self.queue = deque() if self.continuous else []
         self.server_free_at = spawn_s
         self.busy_s = 0.0
         self.served = 0
@@ -335,11 +394,17 @@ class ReplicaEngine:
         # continuous-engine state
         self.active: List[_ActiveRequest] = []
         self.iter_end: Optional[float] = None
-        self._slot_free_s = spawn_s     # last time a decode slot opened
+        self._slot_free_s = spawn_s     # last time capacity opened (a
+        # decode slot freed, or KV blocks freed after blocking admission)
+        self._kv_blocked_ver: Optional[int] = None  # KV version observed
+        # when admission last failed allocation (None = not blocked)
         # memoized policy decision; every queue/clock mutation the engine
         # can see changes (now, len(queue), server_free_at)
         self._decision_key = None
         self._decision = None
+        # bind the dispatch once — act() is called for every engine event
+        self.act = self._act_continuous if self.continuous \
+            else self._act_batched
 
     # ---- routing signals --------------------------------------------------
     def load(self, now: float) -> int:
@@ -436,12 +501,13 @@ class ReplicaEngine:
             for q in batch:
                 tr = traces[q.request.req_id]
                 tr.replica = self.replica_id
-                tr.t_queue = start - q.enqueue_s
-                tr.t_batch_wait = max(
-                    0.0, start - max(q.enqueue_s, prev_free))
-                tr.t_inference = infer_s
-                tr.t_postprocess = POST_PROCESS_S
-                tr.batch_size = bsz
+                if tr.detail:
+                    tr.t_queue = start - q.enqueue_s
+                    tr.t_batch_wait = max(
+                        0.0, start - max(q.enqueue_s, prev_free))
+                    tr.t_inference = infer_s
+                    tr.t_postprocess = POST_PROCESS_S
+                    tr.batch_size = bsz
                 tr.first_token_s = min(first_token, self.server_free_at)
                 tr.tokens_out = clamped_output_tokens(q.request,
                                                       self.max_model_len)
@@ -462,14 +528,15 @@ class ReplicaEngine:
         q.remaining = victim.remaining
         q.recompute_tokens = victim.context
         q.preemptions += 1
-        tr = traces[q.request.req_id]
+        tr = victim.trace
         tr.preemptions += 1
         # close this service segment so stage accounting stays truthful:
         # time served so far is inference, the wait from here to the
         # rejoin accrues to t_queue (segments accumulate via +=)
-        tr.t_inference += now - victim.join_s
+        if tr.detail:
+            tr.t_inference += now - victim.join_s
         q.enqueue_s = now
-        self.queue.insert(0, q)
+        self.queue.appendleft(q)
 
     def _grow_or_preempt(self, still: List[_ActiveRequest], now: float,
                          traces) -> List[_ActiveRequest]:
@@ -520,12 +587,14 @@ class ReplicaEngine:
                         continue
                 a.remaining -= 1
                 a.context += 1
-                tr = traces[a.qreq.request.req_id]
-                tr.tokens_out += 1
-                if tr.first_token_s <= 0.0:
-                    tr.first_token_s = end
+                tr = a.trace
+                if tr.detail:
+                    tr.tokens_out += 1
+                    if tr.first_token_s <= 0.0:
+                        tr.first_token_s = end
                 if a.remaining <= 0:
-                    tr.t_inference += end - a.join_s
+                    if tr.detail:
+                        tr.t_inference += end - a.join_s
                     if self.role == "prefill" and clamped_output_tokens(
                             a.qreq.request, self.max_model_len) > 1:
                         # hand-off point (the cluster loop migrates this
@@ -546,6 +615,15 @@ class ReplicaEngine:
                 still = self._grow_or_preempt(still, now, traces)
             if was_full and len(still) < cap:
                 self._slot_free_s = end
+            if self._kv_blocked_ver is not None \
+                    and self.kv.version != self._kv_blocked_ver:
+                # admission was blocked on a failed KV allocation and
+                # blocks have since been freed: capacity (re)opened *now*,
+                # so the wait up to this point was memory pressure, not
+                # batching policy — advance the marker before admission
+                # below computes t_batch_wait
+                self._slot_free_s = max(self._slot_free_s, end)
+                self._kv_blocked_ver = None
             self.active = still
         if self.iter_end is None and (self.queue or self.active):
             start = max(now, self.spawn_s)
@@ -579,20 +657,27 @@ class ReplicaEngine:
                         prefix_tokens=0 if q.migrated
                         else q.request.prefix_tokens)
                     if got is None:
-                        break           # no KV headroom: stays queued
+                        # no KV headroom: stays queued.  Remember the
+                        # cache's version so the next free() is seen as
+                        # the moment capacity reopened (t_batch_wait must
+                        # not charge this wait to the batching policy)
+                        self._kv_blocked_ver = self.kv.version
+                        break
                     cached = got
-                self.queue.pop(0)
+                self.queue.popleft()
                 tr = traces[q.request.req_id]
                 tr.replica = self.replica_id
-                # += so a preempted request's rejoin adds its re-queue
-                # segment instead of overwriting the first one
-                tr.t_queue += start - q.enqueue_s
-                tr.t_batch_wait += max(
-                    0.0, start - max(q.enqueue_s, self._slot_free_s))
-                tr.cached_prompt_tokens = max(tr.cached_prompt_tokens,
-                                              cached)
+                if tr.detail:
+                    # += so a preempted request's rejoin adds its re-queue
+                    # segment instead of overwriting the first one
+                    tr.t_queue += start - q.enqueue_s
+                    tr.t_batch_wait += max(
+                        0.0, start - max(q.enqueue_s, self._slot_free_s))
+                    tr.cached_prompt_tokens = max(tr.cached_prompt_tokens,
+                                                  cached)
                 a = _ActiveRequest(qreq=q, remaining=remaining,
-                                   context=context0, join_s=start)
+                                   context=context0, join_s=start,
+                                   trace=tr)
                 if q.migrated and not q.recompute_tokens:
                     # KV already resident (transferred): no prefill
                     # compute; it takes a decode step this very iteration
@@ -608,15 +693,23 @@ class ReplicaEngine:
                         prefill_lens.append(need)
                 joined.append(a)
             # in-flight chunked prefills schedule their next chunk
-            for a in self.active:
-                if a.prefill_left > 0:
-                    a.chunk = min(self.chunk_tokens, a.prefill_left)
-                    prefill_lens.append(a.chunk)
+            # (prefill_left can only be nonzero on chunking engines)
+            if self.chunk_tokens:
+                for a in self.active:
+                    if a.prefill_left > 0:
+                        a.chunk = min(self.chunk_tokens, a.prefill_left)
+                        prefill_lens.append(a.chunk)
             if joined or self.active:
-                decoders = [a for a in self.active if a.prefill_left <= 0] \
-                    + decode_joins
+                if self.chunk_tokens:
+                    decoders = [a for a in self.active
+                                if a.prefill_left <= 0] + decode_joins
+                else:
+                    decoders = self.active + decode_joins
                 n_decode = len(decoders)
-                max_ctx = max((a.context for a in decoders), default=0)
+                max_ctx = 0
+                for a in decoders:
+                    if a.context > max_ctx:
+                        max_ctx = a.context
                 n_prefill = len(prefill_lens)
                 max_prompt = max(prefill_lens, default=0)
                 t_iter = self.latency.iteration_latency(
@@ -624,8 +717,9 @@ class ReplicaEngine:
                 self.active.extend(joined)
                 bsz = len(self.active)
                 for a in self.active:
-                    tr = traces[a.qreq.request.req_id]
-                    tr.batch_size = max(tr.batch_size, bsz)
+                    tr = a.trace
+                    if tr.detail and bsz > tr.batch_size:
+                        tr.batch_size = bsz
                 self.iter_end = start + t_iter
                 self.server_free_at = self.iter_end
                 self.busy_s += t_iter
@@ -635,16 +729,19 @@ class ReplicaEngine:
 def simulate(workload: WorkloadSpec, policy: BatchPolicy,
              latency: LatencyModel, *, network: NetworkModel = NETWORKS["lan"],
              server_side_processing: bool = True,
-             memory=None) -> SimResult:
+             memory=None, trace_sample: float = 1.0) -> SimResult:
     """Run the single-replica pipeline simulation.
 
     This is the one-server special case of
     :func:`repro.serving.cluster.simulate_cluster`; closed-loop workloads
     (``kind="closed"``) reissue each client's next request on completion
     until ``duration_s``.  ``memory`` (a ``MemorySpec`` or its dict form)
-    enables KV-cache accounting on the single replica.
+    enables KV-cache accounting on the single replica.  ``trace_sample``
+    < 1 records full per-request traces for only that fraction of
+    requests (aggregates like throughput stay exact; see
+    ``simulate_cluster``).
     """
     from repro.serving.cluster import ClusterSpec, simulate_cluster
     return simulate_cluster(workload, policy, latency,
                             cluster=ClusterSpec(replicas=1, memory=memory),
-                            network=network)
+                            network=network, trace_sample=trace_sample)

@@ -131,6 +131,27 @@ def check_memory_invariants(res: SimResult) -> None:
             "the cluster drained")
 
 
+def check_event_budget(res: SimResult) -> None:
+    """The event loop terminated within a linear event budget.
+
+    ``SimResult.events`` counts arrival/migration pops plus engine acts.
+    Each engine act either starts an iteration or retires one, and every
+    iteration makes real progress (a prefill join or at least one decoded
+    token), so the total is linear in requests + tokens + preemption
+    recompute — a spinning scheduler (an engine re-armed at ``now`` with
+    nothing to do, e.g. KV-blocked admission rescheduling itself) blows
+    this bound long before it would hang the suite."""
+    n = len(res.traces)
+    tokens = sum(t.tokens_out for t in res.traces)
+    pre = sum(t.preemptions for t in res.traces)
+    worst = max((t.request.prompt_tokens + t.tokens_out
+                 for t in res.traces), default=0)
+    bound = 64 + 8 * res.replicas + 4 * (n + tokens + pre * worst)
+    assert 0 < res.events <= bound, (
+        f"{res.events} loop events for {n} requests / {tokens} tokens / "
+        f"{pre} preemptions (budget {bound}) — the scheduler is spinning")
+
+
 def check_token_results_match(res_a: SimResult, res_b: SimResult) -> None:
     """Two runs served the same requests to the same token counts (the
     prefix cache must only skip compute, never change results)."""

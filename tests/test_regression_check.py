@@ -133,7 +133,7 @@ class TestMainExitCodes:
         assert baseline["metrics"], "empty committed baseline"
         for name, entry in baseline["metrics"].items():
             ns, _, rest = name.partition(":")
-            assert ns in ("cluster", "calibrate") and rest, name
+            assert ns in ("cluster", "calibrate", "sim") and rest, name
             assert entry["direction"] in ("higher", "lower", "near")
             float(entry["value"])
         # the issue's headline metrics are all gated
@@ -145,3 +145,5 @@ class TestMainExitCodes:
         # the scenario lane gates per-tenant goodput + fairness
         assert any("goodput" in k for k in keys)
         assert any("fairness" in k for k in keys)
+        # the simulator lane gates its own event-loop throughput
+        assert any("sim_events_per_sec" in k for k in keys)

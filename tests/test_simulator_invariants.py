@@ -23,7 +23,8 @@ from repro.serving.workload import WorkloadSpec
 from invariant_checks import (check_all_complete_exactly_once,
                               check_busy_bound, check_closed_concurrency,
                               check_duration_covers_window,
-                              check_memory_invariants, check_stage_sanity,
+                              check_event_budget, check_memory_invariants,
+                              check_stage_sanity,
                               check_token_results_match, policy_cap,
                               run_sim)
 
@@ -73,6 +74,7 @@ def test_conservation_and_stages(wl, policy, max_batch, replicas, router):
     check_stage_sanity(res, policy_cap(policy, **kw))
     check_busy_bound(res)
     check_duration_covers_window(wl, res)
+    check_event_budget(res)
 
 
 @given(wl=open_workloads(), max_batch=st.integers(1, 16),
@@ -153,6 +155,27 @@ def test_memory_budget_and_completion(wl, policy, max_batch, replicas,
     check_all_complete_exactly_once(wl, res)
     check_memory_invariants(res)
     check_busy_bound(res)
+
+
+@given(wl=memory_workloads(), max_batch=st.integers(1, 16),
+       replicas=st.integers(1, 3),
+       block_tokens=st.sampled_from([8, 16, 32]),
+       extra_blocks=st.integers(0, 2))
+@settings(**SETTINGS)
+def test_kv_blocking_clock_always_advances(wl, max_batch, replicas,
+                                           block_tokens, extra_blocks):
+    """Under the tightest feasible KV budget — barely above one request,
+    so admission is KV-blocked almost continuously — the loop still
+    terminates within a linear event budget: the clock strictly advances
+    (a KV-blocked engine re-armed at ``now`` with nothing admissible
+    would spin, inflating ``SimResult.events`` far past the bound)."""
+    mem = _memory_spec(extra_blocks, wl, block_tokens,
+                       prefix_caching=False)
+    kw = _policy_kw("continuous", max_batch)
+    res = run_sim(wl, "continuous", replicas=replicas, memory=mem, **kw)
+    check_all_complete_exactly_once(wl, res)
+    check_event_budget(res)
+    check_memory_invariants(res)
 
 
 @given(wl=memory_workloads(), max_batch=st.integers(1, 16),
