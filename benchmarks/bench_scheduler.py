@@ -46,6 +46,7 @@ def session_consistency() -> dict:
     def strip(r):
         rec = r.to_record()
         rec.pop("benchmark_wall_s", None)
+        rec.get("result", {}).pop("sim_events_per_sec", None)  # wall-clocked
         return rec
 
     a = {r.job_id: strip(r) for r in inline_res}

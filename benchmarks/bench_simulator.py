@@ -10,14 +10,22 @@ the full run — and reports:
   sim_events_per_sec — engine iterations + arrival/migration pops per
                        wall-clock second (the headline; wall-clocked, so
                        the CI baseline carries a wide tolerance);
+  sim_obs_overhead_frac — relative wall-clock cost of attaching the
+                       repro.obs recorder (also wall-clocked: the CI
+                       gate carries an absolute noise floor);
   events / n_requests / throughput_rps / p99_s — deterministic given the
                        seed (tight tolerance: they catch semantic drift,
                        not machine noise).
 
-Two sections: (a) full trace recording (the default), and (b)
+Three sections: (a) full trace recording (the default), (b)
 ``trace_sample=0.1`` — per-request stage accounting kept for a 10%
 deterministic hash-sample while aggregate throughput/served counts stay
-exact; the bench asserts that equivalence.
+exact (the bench asserts that equivalence) — and (c) observer overhead:
+the same scenario with the ``repro.obs`` time-series recorder attached,
+reported as ``sim_obs_overhead_frac`` (relative wall-clock cost vs. the
+recorder-off run, best-of-3 each; the CI baseline gates it ≤ 5%).  The
+bench also asserts the recorder run's summary is identical to the
+recorder-off run — observability must never move a simulated number.
 
 ``--smoke`` shrinks the workload window for CI (same 16-replica
 topology); ``--json PATH`` writes the metrics dict for the
@@ -32,7 +40,10 @@ from pathlib import Path
 # sys.path, repo root is not)
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
+import dataclasses
+
 from repro.configs import get_config
+from repro.obs.spec import ObsSpec
 from repro.serving.batching import make_policy
 from repro.serving.cluster import ClusterSpec, simulate_cluster
 from repro.serving.latency_model import LatencyModel
@@ -101,6 +112,44 @@ def run(smoke: bool = False, json_path: str | None = None) -> None:
     emit("sim.finding.sampling_exact_aggregates", 0.0,
          f"served_match=True;events_match=True;"
          f"kept_fraction={len(res_s.traces)/max(res_s.requests_served, 1):.3f}")
+
+    # (c) observer overhead: time-series recorder on vs. off, best-of-5
+    # each, interleaved (single-run wall clocks are too noisy for a 5%
+    # gate).  The
+    # timeline stays off so the measurement isolates the recorder's
+    # hot-loop cost (counters + tick sampling), not span-list appends.
+    obs_cluster = dataclasses.replace(cluster,
+                                      obs=ObsSpec(timeline=False))
+    us_off_best = None
+    res_obs = None
+    us_on_best = None
+    for _ in range(5):      # interleaved so clock drift hits both sides
+        us_off = timed(simulate_cluster, wl, policy(), lm,
+                       cluster=cluster)[1]
+        if us_off_best is None or us_off < us_off_best:
+            us_off_best = us_off
+        r, us_on = timed(simulate_cluster, wl, policy(), lm,
+                         cluster=obs_cluster)
+        if us_on_best is None or us_on < us_on_best:
+            us_on_best, res_obs = us_on, r
+    wall_off = us_off_best / 1e6
+    wall_on = us_on_best / 1e6
+    overhead = max(wall_on / wall_off - 1.0, 0.0)
+    assert res_obs.summary() == s, \
+        "observability changed the simulated summary"
+    ts = res_obs.timeseries
+    assert ts.counter_total("completions") == res_obs.requests_served, \
+        (f"completions counter {ts.counter_total('completions')} != "
+         f"served {res_obs.requests_served}")
+    out["obs"] = {
+        "sim_obs_overhead_frac": overhead,
+        "wall_off_s": wall_off,
+        "wall_on_s": wall_on,
+        "ticks": len(ts.times),
+    }
+    emit("sim.obs_overhead", us_on_best,
+         f"overhead={overhead:.1%};ticks={len(ts.times)};"
+         f"off={wall_off*1e3:.0f}ms;on={wall_on*1e3:.0f}ms")
 
     save_json("simulator_fastpath", out)
     if json_path:

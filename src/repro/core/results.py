@@ -78,6 +78,9 @@ class JobResult:
     memory: Optional[Dict[str, Any]] = None    # KV-cache accounting (peak/
                                                # mean occupancy, prefix hit
                                                # rate, preemption count)
+    timeseries: Optional[Dict[str, Any]] = None  # repro.obs Timeseries
+                                               # dict (ObsSpec runs only);
+                                               # the HTML report plots it
     schedule: Optional[ScheduleInfo] = None
     benchmark_wall_s: float = 0.0
     ts: Optional[float] = None
@@ -155,6 +158,8 @@ class JobResult:
             rec["cluster"] = dict(self.cluster)
         if self.memory is not None:
             rec["memory"] = dict(self.memory)
+        if self.timeseries is not None:
+            rec["timeseries"] = dict(self.timeseries)
         rec["benchmark_wall_s"] = self.benchmark_wall_s
         if self.schedule is not None:
             rec["sched"] = self.schedule.to_dict()
@@ -179,6 +184,8 @@ class JobResult:
                      if rec.get("cluster") is not None else None),
             memory=(dict(rec["memory"])
                     if rec.get("memory") is not None else None),
+            timeseries=(dict(rec["timeseries"])
+                        if rec.get("timeseries") is not None else None),
             schedule=(ScheduleInfo.from_dict(rec["sched"])
                       if "sched" in rec else None),
             benchmark_wall_s=rec.get("benchmark_wall_s", 0.0),

@@ -113,11 +113,19 @@ def run_stages(spec: AnyJobSpec) -> JobResult:
         lat = LatencyModel(cfg, hw=hwm, chips=spec.chips,
                            int8=spec.software.int8)
     policy = resolve_policy(spec.software)
+    sim_t0 = time.perf_counter()
     res = simulate_cluster(spec.workload, policy, lat, cluster=spec.cluster,
                            network=NETWORKS[spec.network])
+    sim_wall = time.perf_counter() - sim_t0
     metrics = dict(res.summary(),
                    mode="fitted-profile" if spec.profile
                    else "roofline-model")
+    # simulator provenance on every simulator-backed record: reports can
+    # plot the event-loop perf trajectory straight from PerfDB
+    metrics["events"] = res.events
+    metrics["requests_served"] = res.requests_served or len(res.traces)
+    metrics["sim_events_per_sec"] = (res.events / sim_wall
+                                     if sim_wall > 0 else 0.0)
     if spec.slo_latency_s is not None:
         metrics["slo_attainment"] = res.slo_attainment(spec.slo_latency_s)
     if spec.slo_ttft_s is not None or spec.slo_tpot_s is not None:
@@ -148,6 +156,8 @@ def run_stages(spec: AnyJobSpec) -> JobResult:
         cold_start_s=lat.cold_start(),
         cluster=cluster_info,
         memory=res.memory,
+        timeseries=(res.timeseries.to_dict()
+                    if res.timeseries is not None else None),
         benchmark_wall_s=time.time() - t0)
 
 
@@ -392,6 +402,14 @@ class BenchmarkSession:
     def results(self) -> List[JobResult]:
         """All results produced by this session so far."""
         return list(self._results)
+
+    def report(self, path: str, *, title: str = "Benchmark run report"
+               ) -> str:
+        """Render the session's results as a standalone HTML report
+        (see :mod:`repro.obs.report`); returns the HTML."""
+        from repro.obs.report import write_report
+        return write_report([r.to_record() for r in self._results], path,
+                            title=title)
 
     @property
     def pending(self) -> int:

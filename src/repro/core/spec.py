@@ -14,6 +14,7 @@ import json
 from pathlib import Path
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 
+from repro.obs.spec import ObsSpec
 from repro.serving.cluster import ClusterSpec, DisaggSpec
 from repro.serving.memory import MemorySpec
 from repro.serving.workload import WorkloadSpec
@@ -99,6 +100,10 @@ class BenchmarkJobSpec:
     # set, serving is clocked by the fitted profile instead of the
     # analytic roofline model (hardware/chips then come from the profile)
     profile: Optional[str] = None
+    # observability layer (repro.obs): time-series recorder + span
+    # timeline for this job's simulation.  Merged into the cluster spec;
+    # an ObsSpec already set there wins.  None (default) = fast path.
+    obs: Optional[ObsSpec] = None
 
     def __post_init__(self):
         # accept plain dicts for the nested specs (declarative construction)
@@ -112,6 +117,14 @@ class BenchmarkJobSpec:
                                                       list):
                     d["preferred"] = tuple(d["preferred"])
                 object.__setattr__(self, field, cls(**d))
+        if isinstance(self.obs, dict):
+            object.__setattr__(self, "obs", ObsSpec.from_dict(self.obs))
+        if self.obs is not None and self.cluster.obs is None:
+            # job-level opt-in rides into the simulation via the cluster
+            # spec (idempotent: a round-tripped spec re-merges to itself)
+            object.__setattr__(self, "cluster",
+                               dataclasses.replace(self.cluster,
+                                                   obs=self.obs))
         if self.scenario:
             # resolve the named profile: fill workload fields left at
             # their defaults, and adopt the profile's SLOs where the job

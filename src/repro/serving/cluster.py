@@ -15,6 +15,8 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs.recorder import MetricsRecorder
+from repro.obs.spec import ObsSpec
 from repro.serving.batching import (BatchPolicy, ContinuousBatcher,
                                     QueuedRequest)
 from repro.serving.latency_model import LatencyModel, NetworkModel, NETWORKS
@@ -93,6 +95,9 @@ class ClusterSpec:
                                     # (None → memory unmodeled, legacy)
     disaggregation: Optional[DisaggSpec] = None   # split prefill/decode
                                     # pools (None → colocated, legacy)
+    obs: Optional[ObsSpec] = None   # observability layer (time-series +
+                                    # timeline); None → fast path, zero
+                                    # recording overhead
 
     def __post_init__(self):
         if self.replicas < 1 or self.min_replicas < 1:
@@ -109,6 +114,8 @@ class ClusterSpec:
         if isinstance(self.disaggregation, dict):
             object.__setattr__(self, "disaggregation",
                                DisaggSpec.from_dict(self.disaggregation))
+        if isinstance(self.obs, dict):
+            object.__setattr__(self, "obs", ObsSpec.from_dict(self.obs))
         if self.disaggregation is not None and self.autoscale:
             raise ValueError("disaggregated pools are fixed-size: "
                              "autoscale=True is not supported with "
@@ -398,11 +405,28 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         return KVCacheManager(cluster.memory, resolved) \
             if resolved is not None else None
 
+    # observability (opt-in): counters/gauges + engine activity spans.
+    # rec is None on the default path — every hook below is behind a
+    # single None-check, keeping the fast path's event rate intact.
+    rec: Optional[MetricsRecorder] = None
+    if cluster.obs is not None and cluster.obs.enabled:
+        window0 = 0.0 if workload.kind == TRACE else workload.duration_s
+        rec = MetricsRecorder(cluster.obs,
+                              cluster.obs.resolve_interval(window0))
+    rec_ticks = rec if rec is not None and cluster.obs.timeseries else None
+    # local mirror of rec_ticks.next_tick so the event loop pays one
+    # float compare per pass, not an attribute walk (inf when sampling
+    # is off)
+    obs_next_tick = (rec_ticks.next_tick if rec_ticks is not None
+                     else float("inf"))
+
     def make_engine(i: int, spawn_s: float = 0.0,
                     created_s: float = 0.0) -> ReplicaEngine:
+        if rec is not None:
+            rec.register_engine(i, "serve")
         return ReplicaEngine(i, policy, latency, spawn_s=spawn_s,
                              kv=_kv(), max_model_len=max_len,
-                             created_s=created_s)
+                             created_s=created_s, obs=rec)
 
     migrations: List[Tuple[float, int, Request]] = []  # (kv_ready, id, r)
     prefill_engines: List[ReplicaEngine] = []
@@ -418,13 +442,19 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         prefill_engines = [
             ReplicaEngine(i, prefill_policy, latency, kv=_kv(),
                           max_model_len=max_len, role="prefill",
-                          chunk_tokens=disagg.prefill_chunk_tokens)
+                          chunk_tokens=disagg.prefill_chunk_tokens,
+                          obs=rec)
             for i in range(disagg.prefill_replicas)]
         decode_engines = [
             ReplicaEngine(disagg.prefill_replicas + i, decode_policy,
                           latency, kv=_kv(), max_model_len=max_len,
-                          role="decode")
+                          role="decode", obs=rec)
             for i in range(disagg.decode_replicas)]
+        if rec is not None:
+            for e in prefill_engines:
+                rec.register_engine(e.replica_id, "prefill")
+            for e in decode_engines:
+                rec.register_engine(e.replica_id, "decode")
         engines = prefill_engines + decode_engines
         router = make_router(disagg.prefill_router)
         decode_router = make_router(disagg.decode_router)
@@ -487,6 +517,11 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
             break
         if scaler is not None and next_scale < t_next:
             t_next = next_scale     # only re-evaluate while work remains
+        if obs_next_tick < t_next - EPS:
+            # state is constant between events: every tick in the open
+            # interval (now, t_next) samples it exactly
+            rec_ticks.sample_ticks(t_next, engines)
+            obs_next_tick = rec_ticks.next_tick
         if t_next > now:
             now = t_next
 
@@ -500,6 +535,8 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
             while arrivals and arrivals[0][0] <= now + EPS:
                 t_arr, _, r = heapq.heappop(arrivals)
                 events += 1
+                if rec is not None:
+                    rec.count_arrival(r.tenant)
                 e = ready[router.route(r, ready, now)]
                 e.enqueue(QueuedRequest(request=r, enqueue_s=t_arr))
                 touched.add(e.replica_id)
@@ -550,6 +587,8 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
                     heapq.heappush(migrations,
                                    (done_s + transfer, r.req_id, r))
                     continue
+                if rec is not None:
+                    rec.count_completion(r.tenant)
                 if closed_loop and done_s < workload.duration_s:
                     # the client observes the response and issues its next
                     # request, keeping its loop at concurrency 1
@@ -608,6 +647,13 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
             "evictions": sum(p["evictions"] for p in per),
             "per_replica": per,
         }
+    timeseries = engine_spans = None
+    if rec is not None:
+        if rec_ticks is not None:
+            rec.finish(duration, engines)
+            timeseries = rec.build()
+        if cluster.obs.timeline:
+            engine_spans = rec.spans
     return SimResult(
         traces=done,
         busy_s=sum(e.busy_s for e in engines),
@@ -621,4 +667,6 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         replica_seconds=replica_seconds,
         pools=pools,
         requests_served=served,
-        events=events)
+        events=events,
+        timeseries=timeseries,
+        engine_spans=engine_spans)

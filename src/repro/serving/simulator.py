@@ -111,6 +111,12 @@ class SimResult:
                                         # (engine acts + arrival/migration
                                         # pops) — bench_simulator.py's
                                         # sim-events/sec numerator
+    timeseries: Optional[object] = None  # repro.obs Timeseries (only when
+                                        # the run carried an ObsSpec with
+                                        # timeseries=True)
+    engine_spans: Optional[List] = None  # repro.obs EngineSpan activity
+                                        # (ObsSpec.timeline runs; feeds
+                                        # the Chrome-trace export)
     # percentile/mean metrics re-materialized these arrays on every call
     # (summary() alone did so ~10×); memoize per result.  init=False so
     # dataclasses.replace()-based slicing (tenant_result) starts cold.
@@ -367,8 +373,14 @@ class ReplicaEngine:
                  latency: LatencyModel, spawn_s: float = 0.0,
                  kv: Optional[KVCacheManager] = None,
                  max_model_len: int = 0, role: str = "both",
-                 chunk_tokens: int = 0, created_s: float = 0.0):
+                 chunk_tokens: int = 0, created_s: float = 0.0,
+                 obs=None):
         self.replica_id = replica_id
+        self.obs = obs      # MetricsRecorder hooks (None → zero overhead)
+        # span hook bound only when the timeline actually records, so the
+        # per-iteration site pays one attribute check otherwise
+        self.obs_span = (obs.engine_span if obs is not None
+                         and getattr(obs, "record_spans", False) else None)
         self.policy = policy
         self.latency = latency
         self.continuous = isinstance(policy, ContinuousBatcher)
@@ -493,6 +505,9 @@ class ReplicaEngine:
             self.server_free_at = start + infer_s
             self.busy_s += infer_s
             self.served += bsz
+            if self.obs_span is not None:
+                self.obs_span(self.replica_id, start,
+                              self.server_free_at, "batch", bsz)
             if self.kv is not None:
                 self.kv.charge_span(kv_blocks, start, self.server_free_at)
             # the batch emits its first tokens once the (padded) prefill
@@ -525,6 +540,8 @@ class ReplicaEngine:
         it re-prefills prompt + generated-so-far at latency-model cost."""
         q = victim.qreq
         self.kv.free(q.request.req_id, now, preempted=True)
+        if self.obs is not None:
+            self.obs.count_preemption()
         q.remaining = victim.remaining
         q.recompute_tokens = victim.context
         q.preemptions += 1
@@ -723,13 +740,17 @@ class ReplicaEngine:
                 self.iter_end = start + t_iter
                 self.server_free_at = self.iter_end
                 self.busy_s += t_iter
+                if self.obs_span is not None:
+                    self.obs_span(self.replica_id, start, self.iter_end,
+                                  "iteration", bsz, n_prefill)
         return completions
 
 
 def simulate(workload: WorkloadSpec, policy: BatchPolicy,
              latency: LatencyModel, *, network: NetworkModel = NETWORKS["lan"],
              server_side_processing: bool = True,
-             memory=None, trace_sample: float = 1.0) -> SimResult:
+             memory=None, trace_sample: float = 1.0,
+             obs=None) -> SimResult:
     """Run the single-replica pipeline simulation.
 
     This is the one-server special case of
@@ -739,9 +760,11 @@ def simulate(workload: WorkloadSpec, policy: BatchPolicy,
     enables KV-cache accounting on the single replica.  ``trace_sample``
     < 1 records full per-request traces for only that fraction of
     requests (aggregates like throughput stay exact; see
-    ``simulate_cluster``).
+    ``simulate_cluster``).  ``obs`` (an ``ObsSpec``) opts into the
+    observability layer — time-series + timeline on the single replica.
     """
     from repro.serving.cluster import ClusterSpec, simulate_cluster
     return simulate_cluster(workload, policy, latency,
-                            cluster=ClusterSpec(replicas=1, memory=memory),
+                            cluster=ClusterSpec(replicas=1, memory=memory,
+                                                obs=obs),
                             network=network, trace_sample=trace_sample)

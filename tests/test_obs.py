@@ -1,0 +1,327 @@
+"""Observability layer (repro.obs): span timelines, the time-series
+recorder, and the HTML run report.
+
+The load-bearing invariants:
+  * observability is opt-in and never moves a simulated number — the
+    obs-on summary is identical to the obs-off summary (which the golden
+    tests in test_fastpath guard byte-for-byte);
+  * the counters reconcile exactly with SimResult aggregates
+    (completions == requests_served; live-replica step integral ==
+    replica_seconds for fixed clusters);
+  * the Chrome-trace export reconciles with the RequestTraces it was
+    built from (span durations re-derive the per-stage accounting);
+  * the report is a dependency-free artifact a browser can open.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import BenchmarkJobSpec, ModelRef, PerfDB, run_stages
+from repro.core.spec import ClusterSpec as CoreClusterSpec
+from repro.obs import (MetricsRecorder, ObsSpec, Timeseries, build_trace,
+                       render_report, request_stage_spans, write_report,
+                       write_trace)
+from repro.obs.report import load_records, main as report_main
+from repro.obs.timeline import US
+from repro.serving.batching import make_policy
+from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.latency_model import LatencyModel
+from repro.serving.workload import WorkloadSpec
+
+
+@pytest.fixture(scope="module")
+def lat():
+    return LatencyModel(get_config("gemma2-2b"), chips=4)
+
+
+FLASH = WorkloadSpec(kind="flash-crowd", rate=150.0, duration_s=4.0,
+                     burst_factor=10.0, output_tokens=16, seed=7)
+CLUSTER = ClusterSpec(replicas=2, router="least-loaded")
+
+
+def _policy():
+    return make_policy("continuous", max_batch=8, max_prefill=4)
+
+
+@pytest.fixture(scope="module")
+def flash_obs(lat):
+    return simulate_cluster(FLASH, _policy(), lat,
+                            cluster=dataclasses.replace(
+                                CLUSTER, obs=ObsSpec()))
+
+
+# ---- ObsSpec ----------------------------------------------------------------
+class TestObsSpec:
+    def test_defaults_and_roundtrip(self):
+        spec = ObsSpec()
+        assert spec.enabled and spec.timeseries and spec.timeline
+        back = ObsSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+        assert back == spec
+
+    def test_disabled_when_both_layers_off(self):
+        assert not ObsSpec(timeseries=False, timeline=False).enabled
+
+    def test_negative_interval_rejected(self):
+        with pytest.raises(ValueError):
+            ObsSpec(sample_interval_s=-0.1)
+
+    def test_resolve_interval(self):
+        assert ObsSpec(sample_interval_s=0.25).resolve_interval(10.0) \
+            == 0.25
+        # auto: window / AUTO_TICKS
+        assert ObsSpec().resolve_interval(10.0) == pytest.approx(0.05)
+        # no window (trace replay): the fixed default
+        assert ObsSpec().resolve_interval(0.0) > 0
+
+    def test_job_spec_merge_is_idempotent(self):
+        spec = BenchmarkJobSpec(
+            job_id="o", model=ModelRef(name="gemma2-2b"), chips=4,
+            workload=WorkloadSpec(rate=50, duration_s=1, seed=0),
+            cluster=CoreClusterSpec(replicas=2),
+            obs=ObsSpec(timeline=False))
+        assert spec.cluster.obs == ObsSpec(timeline=False)
+        back = BenchmarkJobSpec.from_dict(spec.to_dict())
+        assert back == spec
+
+
+# ---- the recorder never moves a simulated number ---------------------------
+class TestNoBehaviorChange:
+    def test_summary_identical_obs_on_vs_off(self, lat, flash_obs):
+        res_off = simulate_cluster(FLASH, _policy(), lat, cluster=CLUSTER)
+        assert flash_obs.summary() == res_off.summary()
+        assert res_off.timeseries is None
+        assert res_off.engine_spans is None
+
+    def test_default_path_has_no_recorder(self, lat):
+        wl = WorkloadSpec(rate=40, duration_s=1, seed=3)
+        res = simulate_cluster(wl, _policy(), lat, cluster=CLUSTER)
+        assert res.timeseries is None and res.engine_spans is None
+
+
+# ---- counter / gauge reconciliation ----------------------------------------
+class TestTimeseries:
+    def test_completions_counter_matches_served(self, flash_obs):
+        ts = flash_obs.timeseries
+        served = flash_obs.requests_served or len(flash_obs.traces)
+        assert ts.counter_total("completions") == served
+        assert ts.counter_total("arrivals") == served
+
+    def test_counters_monotone(self, flash_obs):
+        for name in ("arrivals", "completions", "preemptions"):
+            c = flash_obs.timeseries.counter(name)
+            assert all(a <= b for a, b in zip(c, c[1:])), name
+
+    def test_live_replica_integral_matches_replica_seconds(self, flash_obs):
+        ts = flash_obs.timeseries
+        assert ts.live_replica_integral() \
+            == pytest.approx(flash_obs.replica_seconds, rel=1e-6)
+
+    def test_queue_depth_spikes_and_drains(self, flash_obs):
+        """The flash crowd must be visible in the queue-depth series:
+        a spike well above the pre-spike baseline, drained by the end."""
+        q = flash_obs.timeseries.total("queue_depth")
+        t = flash_obs.timeseries.times
+        pre = [v for v, tt in zip(q, t) if tt < FLASH.duration_s / 3]
+        assert max(q) >= max(pre) + 4, "no visible queue spike"
+        assert q[-1] == 0.0, "queue did not drain by the end"
+
+    def test_column_alignment_and_grid(self, flash_obs):
+        ts = flash_obs.timeseries
+        n = len(ts.times)
+        assert n > 50
+        assert len(ts.live_replicas) == n
+        for series in ts.gauges.values():
+            for col in series.values():
+                assert len(col) == n
+        for c in ts.counters.values():
+            assert len(c) == n
+        assert ts.times == sorted(ts.times)
+        assert ts.times[-1] == pytest.approx(flash_obs.duration_s)
+
+    def test_roundtrip(self, flash_obs):
+        ts = flash_obs.timeseries
+        back = Timeseries.from_dict(json.loads(json.dumps(ts.to_dict())))
+        assert back.times == ts.times
+        assert back.gauges == ts.gauges
+        assert back.counters == ts.counters
+        assert back.counter_total("completions") \
+            == ts.counter_total("completions")
+
+    def test_tenant_counter_slicing(self, lat):
+        wl = WorkloadSpec(rate=80, duration_s=2, seed=1, tenants=(
+            {"name": "a", "share": 0.5}, {"name": "b", "share": 0.5}))
+        res = simulate_cluster(wl, _policy(), lat,
+                               cluster=dataclasses.replace(
+                                   CLUSTER, obs=ObsSpec(timeline=False)))
+        ts = res.timeseries
+        assert set(ts.tenants()) == {"a", "b"}
+        total = sum(ts.counter_total("completions", tenant=t)
+                    for t in ts.tenants())
+        assert total == res.requests_served or total == len(res.traces)
+
+    def test_rate_is_per_second(self):
+        ts = Timeseries(interval_s=1.0, times=[1.0, 2.0, 3.0],
+                        live_replicas=[1, 1, 1], gauges={},
+                        counters={"arrivals": [2, 6, 6]},
+                        tenant_counters={}, replica_pool={})
+        assert ts.rate("arrivals") == [2.0, 4.0, 0.0]
+
+
+# ---- Chrome-trace timeline --------------------------------------------------
+class TestTimeline:
+    def test_trace_schema(self, flash_obs):
+        trace = build_trace(flash_obs)
+        events = trace["traceEvents"]
+        assert events, "empty trace"
+        dur_us = flash_obs.duration_s * US
+        for ev in events:
+            assert ev["ph"] in ("X", "C", "M")
+            if ev["ph"] == "X":
+                assert ev["dur"] >= 0
+                assert 0 <= ev["ts"] <= dur_us + 1
+                assert ev["ts"] + ev["dur"] <= dur_us + 1
+                assert isinstance(ev["pid"], int) and ev["pid"] >= 1
+                assert isinstance(ev["tid"], int) and ev["tid"] >= 0
+
+    def test_engine_lanes_present(self, flash_obs):
+        trace = build_trace(flash_obs)
+        engine = [e for e in trace["traceEvents"]
+                  if e["ph"] == "X" and e["tid"] == 0]
+        assert engine, "no engine activity spans"
+        assert {e["pid"] for e in engine} <= {1, 2}
+
+    def test_spans_reconcile_with_request_traces(self, flash_obs):
+        """prefill + decode re-derive t_inference exactly for requests
+        that were never preempted or migrated."""
+        for tr in flash_obs.traces:
+            if tr.preemptions or tr.t_kv_transfer:
+                continue
+            spans = dict((n, e - s)
+                         for n, s, e in request_stage_spans(tr))
+            if "prefill" in spans and "decode" in spans:
+                assert spans["prefill"] + spans["decode"] \
+                    == pytest.approx(tr.t_inference, abs=1e-9)
+            for name, s, e in request_stage_spans(tr):
+                assert e >= s, (name, s, e)
+
+    def test_write_trace_is_perfetto_loadable_json(self, flash_obs,
+                                                   tmp_path):
+        p = tmp_path / "trace.json"
+        write_trace(flash_obs, p)
+        loaded = json.loads(p.read_text())
+        assert "traceEvents" in loaded
+        assert loaded["metadata"]["requests_served"] \
+            == (flash_obs.requests_served or len(flash_obs.traces))
+
+    def test_sampling_rate_counter_track(self, lat):
+        res = simulate_cluster(FLASH, _policy(), lat,
+                               cluster=dataclasses.replace(
+                                   CLUSTER, obs=ObsSpec()),
+                               trace_sample=0.25)
+        trace = build_trace(res)
+        counters = [e for e in trace["traceEvents"] if e["ph"] == "C"
+                    and e["name"] == "sampling_rate"]
+        assert counters, "no sampling_rate counter track"
+        # the hash-sample keeps *about* the requested fraction; the
+        # metadata reports the realized rate
+        assert 0.1 < trace["metadata"]["sampling_rate"] < 0.5
+        # request lanes only exist for the kept sample
+        req_lanes = {e["tid"] for e in trace["traceEvents"]
+                     if e["ph"] == "X" and e["tid"] > 0}
+        assert len(req_lanes) < res.requests_served
+
+
+# ---- session plumbing -------------------------------------------------------
+class TestSessionPlumbing:
+    SPEC = BenchmarkJobSpec(
+        job_id="obs-e2e", model=ModelRef(name="gemma2-2b"), chips=4,
+        workload=WorkloadSpec(kind="flash-crowd", rate=60, duration_s=3,
+                              burst_factor=5.0, output_tokens=8, seed=7),
+        cluster=CoreClusterSpec(replicas=2),
+        obs=ObsSpec())
+
+    def test_provenance_metrics_always_recorded(self):
+        plain = dataclasses.replace(self.SPEC, obs=None,
+                                    cluster=CoreClusterSpec(replicas=2))
+        res = run_stages(plain)
+        assert res.metrics["events"] > 0
+        assert res.metrics["requests_served"] > 0
+        assert res.metrics["sim_events_per_sec"] > 0
+        assert res.timeseries is None
+
+    def test_timeseries_survives_perfdb_roundtrip(self, tmp_path):
+        res = run_stages(self.SPEC)
+        assert res.timeseries is not None
+        db = PerfDB(tmp_path / "perf.jsonl")
+        db.append(res.to_record())
+        rec = db.all()[-1]
+        ts = Timeseries.from_dict(rec["timeseries"])
+        assert ts.counter_total("completions") \
+            == rec["result"]["requests_served"]
+
+
+# ---- HTML report ------------------------------------------------------------
+class TestReport:
+    def _records(self):
+        return [run_stages(TestSessionPlumbing.SPEC).to_record()]
+
+    def test_render_report_standalone_html(self):
+        html = render_report(self._records(), title="flash crowd")
+        assert html.startswith("<!DOCTYPE html>")
+        assert "<svg" in html and "Queue depth" in html
+        assert "flash crowd" in html
+        # dependency-free: no external fetches of any kind
+        assert "http://" not in html and "https://" not in html
+        assert "<script" not in html
+
+    def test_report_warns_on_sampled_traces(self):
+        rec = self._records()[0]
+        rec["result"]["sampling_rate"] = 0.1
+        html = render_report([rec])
+        assert "sampl" in html.lower()
+
+    def test_cli(self, tmp_path):
+        db = tmp_path / "perf.jsonl"
+        with db.open("w") as f:
+            f.write(json.dumps(self._records()[0]) + "\n")
+        out = tmp_path / "report.html"
+        rc = report_main([str(db), "-o", str(out),
+                          "--baseline",
+                          "benchmarks/baselines/ci_baseline.json"])
+        assert rc == 0
+        html = out.read_text()
+        assert "<svg" in html and "Baseline deltas" in html
+        assert load_records(db)
+
+
+# ---- recorder unit behavior -------------------------------------------------
+class TestRecorderUnit:
+    class _Engine:
+        def __init__(self, rid):
+            self.replica_id = rid
+            self.queue = [1, 2]
+            self.active = {}
+            self.kv = None
+            self.retired = False
+            self.continuous = True
+            self.server_free_at = 0.0
+
+    def test_midrun_replica_zero_padded(self):
+        rec = MetricsRecorder(ObsSpec(timeline=False), interval_s=0.1)
+        e0 = self._Engine(0)
+        rec.register_engine(0, "serve")
+        rec.sample_ticks(0.35, [e0])            # ticks 0.0/0.1/0.2/0.3
+        e1 = self._Engine(1)                    # spawned mid-run
+        rec.register_engine(1, "serve")
+        rec.finish(0.5, [e0, e1])
+        ts = rec.build()
+        col = ts.replica("queue_depth", 1)
+        assert len(col) == len(ts.times)
+        assert col[0] == 0.0 and col[-1] == 2.0
+
+    def test_engine_span_noop_when_timeline_off(self):
+        rec = MetricsRecorder(ObsSpec(timeline=False), interval_s=0.1)
+        rec.engine_span(0, 0.0, 1.0, "iteration", 4)
+        assert rec.spans == []
