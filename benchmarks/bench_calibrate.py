@@ -1,6 +1,6 @@
 """Calibration + capacity planning: the measure → model → plan loop.
 
-Four sections:
+Five sections:
   (a) measured fc-family calibration — real CPU execution over a batch
       grid, least-squares fit, held-out grid points must be predicted
       within 15% mean relative error;
@@ -12,7 +12,13 @@ Four sections:
       p(e2e ≤ SLO) ≥ target, re-verified with ``simulate_cluster``;
   (d) memory-aware planning — the same profile planned under a KV-cache
       budget: a latency-feasible decode-slot count must be *rejected*
-      for exceeding HBM, with the reason reported.
+      for exceeding HBM, with the reason reported;
+  (e) kernel-calibrated speed modes — the Pallas-kernel backend sweeps
+      real kernels into ``backend="pallas-kernel"`` PerfDB records and a
+      kernels+speed_modes profile, then a KV-bound plan over
+      ``speed_modes=("fp16", "int8", "speculative")`` must recommend a
+      *non-fp16* config on cost-per-goodput, re-verified by independent
+      simulation.
 
 ``--smoke`` keeps grids/durations CI-sized (it is already small; smoke
 mainly trims the plan grid); ``--json PATH`` writes the metrics dict to
@@ -29,7 +35,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from repro.analysis.memory_model import kv_bytes_per_token
-from repro.calibrate import plan_capacity
+from repro.calibrate import plan_capacity, simulate_candidate
 from repro.configs import get_config
 from repro.core import (BenchmarkSession, CalibrationSpec, MemorySpec,
                         ModelRef, PerfDB, PlanSpec)
@@ -168,6 +174,82 @@ def memory_aware_plan(session, smoke, profile_path, out):
          f"{big_bound.infeasible_reason}")
 
 
+def kernel_speed_mode_plan(session, smoke, profile_dir, out):
+    """Acceptance: kernel-calibrated profile + speed-mode planning.
+
+    The Pallas-kernel backend must land ``backend="pallas-kernel"``
+    records in the PerfDB and a kernels+speed_modes profile; a KV-bound
+    plan over fp16/int8/speculative must then recommend a non-fp16
+    config on cost-per-goodput, and that recommendation must survive an
+    independent re-simulation."""
+    spec = CalibrationSpec(
+        job_id="cal-kernels", model=ModelRef(name="gemma2-2b"),
+        hardware="tpu-v5e", chips=1,
+        batches=(1, 2) if smoke else (1, 2, 4),
+        seqs=(64, 128) if smoke else (64, 128, 256),
+        repeats=2 if smoke else 3,
+        kernels=("flash_attention", "int8_matmul") if smoke
+        else ("flash_attention", "decode_attention", "int8_matmul",
+              "wkv6", "rglru_scan"),
+        profile_dir=str(profile_dir))
+    handle = session.submit(spec)
+    _, us = timed(session.run)
+    m = handle.result().metrics
+    krecs = session.db.query(kind="calibration", backend="pallas-kernel")
+    assert krecs, "no backend=pallas-kernel records landed in the PerfDB"
+    profile = m["profile"]
+    assert profile.get("kernels"), "profile carries no kernel fits"
+    assert set(profile.get("speed_modes", {})) >= {"int8", "speculative"}
+    emit("calibrate.kernels.records", us,
+         f"n={m['n_kernel_records']};kernels={','.join(m['kernels'])};"
+         f"fits={len(profile['kernels'])}")
+
+    # KV-bound plan: long contexts against a tight per-replica budget —
+    # fp16's big batches are memory-rejected, int8's half-size KV entries
+    # fit, so the quantized config must win on $/SLO-meeting request
+    wl = WorkloadSpec(kind="poisson", rate=4.0,
+                      duration_s=10 if smoke else 20,
+                      prompt_tokens=2048, output_tokens=256, seed=0)
+    kv_b = kv_bytes_per_token(get_config("gemma2-2b"))
+    memory = MemorySpec(hbm_gb=2.0, kv_bytes_per_token=kv_b)
+    plan_kw = dict(slo_latency_s=20.0, slo_target=0.9,
+                   replicas=(1,), policies=("continuous",),
+                   routers=("least-loaded",), max_batches=(8, 16),
+                   memory=memory, objective="cost_per_goodput")
+    plan = plan_capacity(str(m["profile_path"]), wl,
+                         speed_modes=("fp16", "int8", "speculative"),
+                         **plan_kw)
+    print(plan_table(plan))
+    best = plan.best
+    assert best is not None, "no speed-mode candidate met the SLO"
+    assert best.speed_mode != "fp16", \
+        (f"expected a quantized/speculative winner on the KV-bound "
+         f"workload, got {best.speed_mode}")
+    rejected_fp16 = [c for c in plan.candidates
+                     if c.speed_mode == "fp16" and c.infeasible_reason]
+    assert rejected_fp16, "fp16 was never memory-rejected — not KV-bound"
+
+    # independent re-verification of the winner, outside the plan grid
+    res = simulate_candidate(str(m["profile_path"]), wl, best,
+                             memory=memory)
+    att = res.slo_attainment(20.0)
+    assert att >= 0.9, \
+        f"speed-mode winner failed re-verification: attainment {att:.3f}"
+    out["speed_modes"] = {
+        "n_kernel_records": m["n_kernel_records"],
+        "kernel_fits": len(profile["kernels"]),
+        "perfdb_kernel_records": len(krecs),
+        "best_mode": best.speed_mode,
+        "best_is_non_fp16": int(best.speed_mode != "fp16"),
+        "best_objective": best.objective,
+        "fp16_rejected": len(rejected_fp16),
+        "reverify_attainment": att,
+    }
+    emit("calibrate.finding.speed_mode_wins", 0.0,
+         f"best={best.speed_mode};max_batch={best.max_batch};"
+         f"objective=${best.objective:.6f};reverified_slo={att:.2f}")
+
+
 def run(smoke: bool = False, json_path: str | None = None,
         perfdb_path: str | None = None) -> None:
     out = {}
@@ -182,6 +264,7 @@ def run(smoke: bool = False, json_path: str | None = None,
     profile_path = oracle_gemma_calibration(session, smoke, profile_dir, out)
     capacity_plan(session, smoke, profile_path, out)
     memory_aware_plan(session, smoke, profile_path, out)
+    kernel_speed_mode_plan(session, smoke, profile_dir, out)
     out["calibration_records_in_perfdb"] = len(
         session.db.query(kind="calibration"))
     save_json("calibrate", out)

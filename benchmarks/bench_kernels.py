@@ -1,7 +1,20 @@
 """Kernel micro-benchmarks: interpret-mode Pallas vs pure-jnp reference
 wall times on CPU (correctness-path timings; TPU perf is in §Roofline),
-plus the analytic speedup the flash-decode layout buys on TPU v5e."""
+plus the analytic speedup the flash-decode layout buys on TPU v5e.
+
+``--smoke`` instead runs the calibration backend
+(``repro.calibrate.kernel_bench``) over a CI-sized grid for every
+registered kernel — verified against the references, fitted per
+(kernel, dtype) — and ``--json PATH`` dumps the metrics for the
+perf-regression lane (wall-clocked latencies carry wide tolerances in
+the baseline; the record/fit counts and verification residuals are
+deterministic)."""
 from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +23,7 @@ from repro import hw as hw_lib
 from repro.kernels import ref
 from repro.serving.latency_model import MeasuredLatency
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import dump_json, emit, save_json
 
 
 def run() -> None:
@@ -58,5 +71,51 @@ def run() -> None:
     save_json("kernels_micro", out)
 
 
+def run_smoke(json_path: str | None = None) -> None:
+    """CI lane: sweep every registered kernel through the calibration
+    backend on a tiny grid, verify against references, fit, and dump
+    per-(kernel, dtype) metrics."""
+    from repro.calibrate import (fit_kernel_records, kernel_records,
+                                 kernel_registry)
+    names = sorted(kernel_registry())
+    records = kernel_records(names, batches=(1, 2), seqs=(64, 128),
+                             dtypes=("float32",), repeats=2,
+                             meta={"job_id": "bench-kernels"})
+    fits = fit_kernel_records(records)
+    out = {"n_records": len(records), "n_fits": len(fits),
+           "verified_pairs": len({(r["kernel"], r["dtype"])
+                                  for r in records
+                                  if r["result"]["max_err_vs_ref"]
+                                  is not None}),
+           "kernels": {}}
+    for key, fit in sorted(fits.items()):
+        series = [r["result"]["latency_s"] for r in records
+                  if f"{r['kernel']}/{r['dtype']}" == key]
+        entry = {"latency_s_min": min(series),
+                 "latency_s_max": max(series),
+                 "n_points": fit["n_points"],
+                 "max_err_vs_ref": fit["max_err_vs_ref"]}
+        out["kernels"][key] = entry
+        emit(f"kernels.calib.{key}", entry["latency_s_min"] * 1e6,
+             f"points={fit['n_points']};"
+             f"max_err={fit['max_err_vs_ref']:.2e};"
+             f"mode={records[0]['result']['mode']}")
+    save_json("kernels_calib", out)
+    if json_path:
+        dump_json(json_path, out)
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized calibration-backend sweep instead of "
+                         "the micro-benchmarks")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the metrics dict to PATH "
+                         "(perf-regression lane input; implies --smoke)")
+    args = ap.parse_args()
+    if args.smoke or args.json:
+        run_smoke(json_path=args.json)
+    else:
+        run()

@@ -21,6 +21,10 @@ All three run through ``BenchmarkSession.submit`` via
 CLI, or directly through the functions re-exported here.
 """
 from repro.calibrate.fit import fit_phase, fit_records, split_points
+from repro.calibrate.kernel_bench import (attach_kernel_calibration,
+                                          derive_speed_modes,
+                                          fit_kernel_records, kernel_records,
+                                          kernel_registry)
 from repro.calibrate.microbench import (fit_calibration, measured_records,
                                         oracle_records, run_calibration_job,
                                         sweep_calibration)
@@ -34,8 +38,10 @@ from repro.calibrate.profile import (DEFAULT_PROFILE_DIR, PROFILE_SCHEMA,
 __all__ = [
     "CalibrationProfile", "PhaseFit", "PlanCandidate", "PlanResult",
     "DEFAULT_PROFILE_DIR", "PROFILE_SCHEMA",
-    "fit_calibration", "fit_phase", "fit_records", "load_profile",
-    "measured_records", "oracle_records", "plan_capacity", "plan_from_spec",
-    "profile_path", "run_calibration_job", "run_plan_job",
-    "simulate_candidate", "split_points", "sweep_calibration",
+    "attach_kernel_calibration", "derive_speed_modes", "fit_calibration",
+    "fit_kernel_records", "fit_phase", "fit_records", "kernel_records",
+    "kernel_registry", "load_profile", "measured_records", "oracle_records",
+    "plan_capacity", "plan_from_spec", "profile_path", "run_calibration_job",
+    "run_plan_job", "simulate_candidate", "split_points",
+    "sweep_calibration",
 ]

@@ -183,6 +183,22 @@ def run_calibration_job(spec: CalibrationSpec) -> JobResult:
     t0 = time.time()
     records = sweep_calibration(spec)
     profile = fit_calibration(spec, records)
+    kernel_recs: List[Dict[str, Any]] = []
+    if spec.kernels:
+        # Pallas-kernel backend: microbench the requested kernels on the
+        # same (batch × seq) grid and fold their fits + derived speed
+        # modes into the profile (records keep backend provenance)
+        from repro.calibrate import kernel_bench
+        meta = {"job_id": spec.job_id, "user": spec.user,
+                "arch": spec.model.label, "hardware": spec.hardware,
+                "chips": spec.chips}
+        kernel_recs = kernel_bench.kernel_records(
+            spec.kernels, batches=spec.batches, seqs=spec.seqs,
+            repeats=max(spec.repeats, 1), target=spec.kernel_target,
+            meta=meta)
+        profile = kernel_bench.attach_kernel_calibration(
+            profile, kernel_recs)
+        records = records + kernel_recs
     saved: Optional[str] = None
     if spec.profile_dir:
         saved = str(profile.save(spec.profile_dir))
@@ -197,6 +213,9 @@ def run_calibration_job(spec: CalibrationSpec) -> JobResult:
         "profile_path": saved,
         "profile": profile.to_dict(),
     }
+    if kernel_recs:
+        metrics["n_kernel_records"] = len(kernel_recs)
+        metrics["kernels"] = sorted({r["kernel"] for r in kernel_recs})
     if profile.holdout:
         metrics["holdout"] = dict(profile.holdout)
     return JobResult(spec=spec, metrics=metrics, extra_records=records,

@@ -18,9 +18,11 @@ from repro.calibrate.profile import CalibrationProfile, load_profile
 from repro.core.results import JobResult
 from repro.core.spec import PlanSpec
 from repro.serving.cluster import ClusterSpec, DisaggSpec, simulate_cluster
-from repro.serving.latency_model import NETWORKS
+from repro.serving.latency_model import (NETWORKS, SpeedMode,
+                                         apply_speed_mode,
+                                         resolve_speed_mode)
 from repro.serving.memory import (GiB, KVBudgetError, MemorySpec,
-                                  resolve_memory)
+                                  resolve_memory, scaled_memory_spec)
 from repro.serving.workload import WorkloadSpec
 
 
@@ -33,7 +35,9 @@ class PlanCandidate:
     per-replica HBM budget, however good its latency would be).
     ``split`` is ``(prefill_replicas, decode_replicas)`` for a
     disaggregated candidate, None for colocated; ``replicas`` is always
-    the total chip-normalizing replica count.
+    the total chip-normalizing replica count.  ``speed_mode`` names the
+    serving mode the candidate was simulated under ("fp16" when the
+    plan searched none).
     """
     replicas: int
     policy: str
@@ -43,6 +47,7 @@ class PlanCandidate:
     objective: float                # the minimized metric's value
     max_batch: int = 0              # 0 in legacy single-max_batch plans
     split: Optional[Sequence[int]] = None
+    speed_mode: str = "fp16"
     infeasible_reason: Optional[str] = None
 
     def to_dict(self) -> Dict[str, Any]:
@@ -135,6 +140,7 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                   kv_network: str = "infiniband",
                   network: str = "lan",
                   objective: str = "cost_per_1k_req",
+                  speed_modes: Sequence[Any] = (),
                   memory: Optional[MemorySpec] = None) -> PlanResult:
     """Search the configuration grid for the cheapest SLO-meeting setup.
 
@@ -168,6 +174,15 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
     candidates are simulated under that budget, so preemption/thrashing
     shows up in their latency numbers.  ``max_batches`` widens the grid
     over decode-slot counts (default: just ``max_batch``).
+
+    ``speed_modes`` multiplies the grid by serving speed modes (names,
+    :class:`SpeedMode` instances, or parameter dicts): each candidate is
+    simulated under the mode-scaled oracle *and* the mode-scaled memory
+    budget (int8 KV entries are half-size, so the same HBM admits bigger
+    batches), letting the planner recommend a quantized or speculative
+    config when it wins on the objective.  Names resolve through the
+    profile's calibrated ``speed_modes`` section first, then the
+    built-in presets.
     """
     tenant_specs = ()
     if tenants:
@@ -185,18 +200,28 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
     elif slo_latency_s is None and ttft_slo_s is None and tpot_slo_s is None:
         raise ValueError("plan_capacity needs at least one SLO: "
                          "slo_latency_s, ttft_slo_s, or tpot_slo_s")
+    if isinstance(profile, dict):
+        profile = CalibrationProfile.from_dict(profile)
+    elif isinstance(profile, str):
+        profile = load_profile(profile)
+    mode_overrides = None
     if isinstance(profile, CalibrationProfile):
         oracle, key = profile.to_latency_model(), profile.key
-    elif isinstance(profile, (str, dict)):
-        from repro.serving.latency_model import FittedLatencyModel
-        oracle = FittedLatencyModel.from_profile(profile)
-        key = oracle.name
+        mode_overrides = profile.speed_modes
     else:
         oracle, key = profile, getattr(profile, "name", "oracle")
     if isinstance(memory, dict):
         memory = MemorySpec.from_dict(memory)
     mbs = tuple(max_batches) or (max_batch,)
     phase_slos = ttft_slo_s is not None or tpot_slo_s is not None
+
+    # the speed-mode axis: calibrated profile parameters win over the
+    # built-in presets; duplicates (by name) collapse to the first
+    modes: List[SpeedMode] = []
+    for m in (speed_modes or ("fp16",)):
+        sm = resolve_speed_mode(m, mode_overrides)
+        if all(sm.name != seen.name for seen in modes):
+            modes.append(sm)
 
     # grid rows: (total_replicas, policy, router, max_batch, split)
     grid: List[tuple] = [
@@ -223,73 +248,92 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                             for i, t in enumerate(tenant_specs)]
 
     candidates: List[PlanCandidate] = []
-    for n, pol, router, mb, split in grid:
-        reason = None
-        if memory is not None:
-            reason = next(
-                (r for r in (_memory_working_set_reason(memory, oracle,
-                                                        wl, mb)
-                             for wl in sizing_workloads)
-                 if r is not None), None)
-        if reason is not None:
-            candidates.append(PlanCandidate(
-                replicas=n, policy=pol, router=router, metrics={},
-                meets_slo=False, objective=float("inf"),
-                max_batch=mb, split=split, infeasible_reason=reason))
-            continue
-        if split is None:
-            cluster = ClusterSpec(replicas=n, router=router, memory=memory)
-        else:
-            cluster = ClusterSpec(
-                replicas=n, router=router, memory=memory,
-                disaggregation=DisaggSpec(
-                    prefill_replicas=split[0], decode_replicas=split[1],
-                    prefill_router=router, decode_router=router,
-                    prefill_max_batch=max_prefill, kv_network=kv_network))
-        try:
-            res = simulate_cluster(
-                workload, _policy(pol, mb, max_prefill), oracle,
-                cluster=cluster, network=NETWORKS[network])
-        except KVBudgetError as exc:
-            # budget validation caught something the static estimate
-            # missed (e.g. per-request lengths from a replayed trace):
-            # reject the candidate instead of failing the whole grid
-            candidates.append(PlanCandidate(
-                replicas=n, policy=pol, router=router, metrics={},
-                meets_slo=False, objective=float("inf"),
-                max_batch=mb, split=split, infeasible_reason=str(exc)))
-            continue
-        if tenant_specs:
-            # a tenant mix is judged by its weakest member: every
-            # tenant must hit its *own* resolved SLOs at the target
-            from repro.scenarios.tenants import tenant_report
-            report = tenant_report(res, tenant_specs)
-            att = report["worst_tenant_attainment"]
-            metrics = dict(res.summary(), slo_attainment=att,
-                           fairness_index=report["fairness_index"],
-                           worst_tenant=report["worst_tenant"],
-                           min_goodput_rps=report["min_goodput_rps"],
-                           tenants=report["per_tenant"])
-        else:
-            if phase_slos:
-                att = res.phase_slo_attainment(ttft_slo_s=ttft_slo_s,
-                                               tpot_slo_s=tpot_slo_s,
-                                               e2e_slo_s=slo_latency_s)
+    for mode in modes:
+        # mode-scaled serving physics: the oracle's latencies, KV
+        # footprint, and resident weights all shift together, and an
+        # explicit memory budget re-grounds at the smaller KV entry size
+        oracle_m = apply_speed_mode(oracle, mode)
+        memory_m = scaled_memory_spec(memory, mode)
+        for n, pol, router, mb, split in grid:
+            reason = None
+            if memory_m is not None:
+                reason = next(
+                    (r for r in (_memory_working_set_reason(memory_m,
+                                                            oracle_m,
+                                                            wl, mb)
+                                 for wl in sizing_workloads)
+                     if r is not None), None)
+            if reason is not None:
+                candidates.append(PlanCandidate(
+                    replicas=n, policy=pol, router=router, metrics={},
+                    meets_slo=False, objective=float("inf"),
+                    max_batch=mb, split=split, speed_mode=mode.name,
+                    infeasible_reason=reason))
+                continue
+            if split is None:
+                cluster = ClusterSpec(replicas=n, router=router,
+                                      memory=memory_m)
             else:
-                att = res.slo_attainment(slo_latency_s)
-            metrics = dict(res.summary(), slo_attainment=att)
-            if phase_slos:
-                metrics["goodput_rps"] = res.goodput(ttft_slo_s, tpot_slo_s,
-                                                     slo_latency_s)
-        if objective not in metrics:
-            raise ValueError(
-                f"unknown plan objective {objective!r} "
-                f"(available: {sorted(metrics)})")
-        candidates.append(PlanCandidate(
-            replicas=n, policy=pol, router=router, metrics=metrics,
-            meets_slo=att >= slo_target,
-            objective=float(metrics[objective]), max_batch=mb,
-            split=split))
+                cluster = ClusterSpec(
+                    replicas=n, router=router, memory=memory_m,
+                    disaggregation=DisaggSpec(
+                        prefill_replicas=split[0],
+                        decode_replicas=split[1],
+                        prefill_router=router, decode_router=router,
+                        prefill_max_batch=max_prefill,
+                        kv_network=kv_network))
+            try:
+                res = simulate_cluster(
+                    workload, _policy(pol, mb, max_prefill), oracle_m,
+                    cluster=cluster, network=NETWORKS[network])
+            except KVBudgetError as exc:
+                # budget validation caught something the static estimate
+                # missed (e.g. per-request lengths from a replayed
+                # trace): reject the candidate, not the whole grid
+                candidates.append(PlanCandidate(
+                    replicas=n, policy=pol, router=router, metrics={},
+                    meets_slo=False, objective=float("inf"),
+                    max_batch=mb, split=split, speed_mode=mode.name,
+                    infeasible_reason=str(exc)))
+                continue
+            if tenant_specs:
+                # a tenant mix is judged by its weakest member: every
+                # tenant must hit its *own* resolved SLOs at the target
+                from repro.scenarios.tenants import tenant_report
+                report = tenant_report(res, tenant_specs)
+                att = report["worst_tenant_attainment"]
+                metrics = dict(res.summary(), slo_attainment=att,
+                               fairness_index=report["fairness_index"],
+                               worst_tenant=report["worst_tenant"],
+                               min_goodput_rps=report["min_goodput_rps"],
+                               tenants=report["per_tenant"])
+            else:
+                if phase_slos:
+                    att = res.phase_slo_attainment(
+                        ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s,
+                        e2e_slo_s=slo_latency_s)
+                else:
+                    att = res.slo_attainment(slo_latency_s)
+                metrics = dict(res.summary(), slo_attainment=att)
+                metrics["goodput_rps"] = res.goodput(
+                    ttft_slo_s, tpot_slo_s, slo_latency_s)
+            # $/goodput-req: the speed-mode tiebreaker — a mode only wins
+            # by serving more SLO-meeting traffic per dollar, not by raw
+            # throughput
+            gp = metrics.get("goodput_rps",
+                             metrics.get("min_goodput_rps", 0.0))
+            metrics["cost_per_goodput"] = \
+                metrics.get("cost_usd", 0.0) / (gp * res.duration_s) \
+                if gp > 0 and res.duration_s else float("inf")
+            if objective not in metrics:
+                raise ValueError(
+                    f"unknown plan objective {objective!r} "
+                    f"(available: {sorted(metrics)})")
+            candidates.append(PlanCandidate(
+                replicas=n, policy=pol, router=router, metrics=metrics,
+                meets_slo=att >= slo_target,
+                objective=float(metrics[objective]), max_batch=mb,
+                split=split, speed_mode=mode.name))
     candidates.sort(key=lambda c: (not c.meets_slo, c.objective))
     return PlanResult(profile_key=key, slo_latency_s=slo_latency_s,
                       slo_target=slo_target, objective=objective,
@@ -307,20 +351,27 @@ def simulate_candidate(profile, workload: WorkloadSpec,
     """Re-simulate one plan candidate and return the raw ``SimResult``.
 
     This is the verification half of plan → verify: rebuild exactly the
-    cluster a :class:`PlanCandidate` describes and run the workload
-    through it, so a caller can independently confirm the planner's
-    claimed attainment (e.g. per-tenant SLOs of the cheapest feasible
-    config) rather than trust the grid numbers.
+    cluster a :class:`PlanCandidate` describes — including its
+    ``speed_mode`` — and run the workload through it, so a caller can
+    independently confirm the planner's claimed attainment (e.g.
+    per-tenant SLOs of the cheapest feasible config) rather than trust
+    the grid numbers.
     """
+    if isinstance(profile, dict):
+        profile = CalibrationProfile.from_dict(profile)
+    elif isinstance(profile, str):
+        profile = load_profile(profile)
+    mode_overrides = None
     if isinstance(profile, CalibrationProfile):
         oracle = profile.to_latency_model()
-    elif isinstance(profile, (str, dict)):
-        from repro.serving.latency_model import FittedLatencyModel
-        oracle = FittedLatencyModel.from_profile(profile)
+        mode_overrides = profile.speed_modes
     else:
         oracle = profile
     if isinstance(memory, dict):
         memory = MemorySpec.from_dict(memory)
+    mode = resolve_speed_mode(candidate.speed_mode, mode_overrides)
+    oracle = apply_speed_mode(oracle, mode)
+    memory = scaled_memory_spec(memory, mode)
     if tenants:
         from repro.scenarios.tenants import coerce_tenants
         workload = dataclasses.replace(workload,
@@ -359,6 +410,7 @@ def plan_from_spec(spec: PlanSpec) -> PlanResult:
         prefill_decode_splits=spec.prefill_decode_splits,
         kv_network=spec.kv_network,
         network=spec.network, objective=spec.objective,
+        speed_modes=spec.speed_modes,
         memory=spec.memory)
 
 

@@ -62,6 +62,14 @@ class CalibrationProfile:
     cold_start_s: float = 2.0
     holdout: Optional[Dict[str, float]] = None   # held-out validation errs
     grid: Optional[Dict[str, Sequence[int]]] = None
+    # per-kernel microbench fits keyed "<kernel>/<dtype>" — PhaseFit dict
+    # plus provenance (backend, phase, n_points, max_err vs reference);
+    # produced by repro.calibrate.kernel_bench, absent on plain profiles
+    kernels: Optional[Dict[str, Dict[str, Any]]] = None
+    # calibrated SpeedMode parameter dicts keyed by mode name ("int8",
+    # "speculative", ...) — resolve_speed_mode() consults these before
+    # the built-in presets when the planner expands its speed_modes axis
+    speed_modes: Optional[Dict[str, Dict[str, Any]]] = None
     created_ts: Optional[float] = None
     schema: str = PROFILE_SCHEMA
 

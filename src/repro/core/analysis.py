@@ -167,16 +167,17 @@ def plan_table(plan) -> str:
               f"SLO p({' ∧ '.join(slos)}) ≥ "
               f"{plan.slo_target:.0%}, minimize {plan.objective}")
     cols = f"{'':2s}{'replicas':>9}{'split':>7}{'policy':>12}" \
-           f"{'router':>14}{'slots':>7}{'thr rps':>9}{'p99 ms':>8}" \
-           f"{'ttft99':>8}{'slo':>6}{plan.objective:>16}"
+           f"{'router':>14}{'slots':>7}{'mode':>12}{'thr rps':>9}" \
+           f"{'p99 ms':>8}{'ttft99':>8}{'slo':>6}{plan.objective:>18}"
     lines = [header, cols]
     for c in plan.candidates:
         m = c.metrics
         slots = getattr(c, "max_batch", 0) or "-"
         split = getattr(c, "split", None)
         split_s = f"{split[0]}+{split[1]}" if split else "-"
+        mode = getattr(c, "speed_mode", "fp16") or "fp16"
         prefix = f"{'':2s}{c.replicas:>9}{split_s:>7}{c.policy:>12}" \
-                 f"{c.router:>14}{slots:>7}"
+                 f"{c.router:>14}{slots:>7}{mode:>12}"
         if getattr(c, "infeasible_reason", None):
             lines.append(f"m {prefix[2:]}  REJECTED: {c.infeasible_reason}")
             continue
@@ -188,7 +189,7 @@ def plan_table(plan) -> str:
         lines.append(f"{star}{prefix[2:]}"
                      f"{m['throughput_rps']:>9.1f}{m['p99_s'] * 1e3:>8.1f}"
                      f"{ttft_s}"
-                     f"{m['slo_attainment']:>6.2f}{c.objective:>16.5f}")
+                     f"{m['slo_attainment']:>6.2f}{c.objective:>18.6f}")
     if best is None:
         lines.append("  (no configuration met the SLO target)")
     return "\n".join(lines)

@@ -112,6 +112,11 @@ def run_stages(spec: AnyJobSpec) -> JobResult:
         cfg = get_config(spec.model.name)
         lat = LatencyModel(cfg, hw=hwm, chips=spec.chips,
                            int8=spec.software.int8)
+    if spec.software.speed_mode:
+        # serving speed mode (int8 / speculative): scale the oracle's
+        # roofline terms and effective decode step
+        from repro.serving.latency_model import apply_speed_mode
+        lat = apply_speed_mode(lat, spec.software.speed_mode)
     policy = resolve_policy(spec.software)
     sim_t0 = time.perf_counter()
     res = simulate_cluster(spec.workload, policy, lat, cluster=spec.cluster,
@@ -120,6 +125,8 @@ def run_stages(spec: AnyJobSpec) -> JobResult:
     metrics = dict(res.summary(),
                    mode="fitted-profile" if spec.profile
                    else "roofline-model")
+    if spec.software.speed_mode:
+        metrics["speed_mode"] = spec.software.speed_mode
     # simulator provenance on every simulator-backed record: reports can
     # plot the event-loop perf trajectory straight from PerfDB
     metrics["events"] = res.events

@@ -63,6 +63,25 @@ class ModelRef:
 
 @dataclasses.dataclass(frozen=True)
 class SoftwareSpec:
+    """Serving-software tier: batching policy + runtime options.
+
+    Attributes:
+        policy: batching scheduler — ``none`` | ``tfs`` | ``tris`` |
+            ``continuous`` (Orca-style continuous batching).
+        max_batch: batch-window cap (tfs/tris) or continuous-batching
+            decode slots per replica (requests).
+        timeout_s: batch-window wait timeout (seconds).
+        preferred: preferred batch sizes, largest first (tris policy).
+        max_prefill: continuous batching — prefills admitted per engine
+            iteration (requests).
+        int8: the paper's INT8-conversion step (legacy boolean; prefer
+            ``speed_mode="int8"``).
+        use_pallas_kernels: route model execution through the Pallas
+            kernels (``repro.kernels.ops``) instead of pure-jnp refs.
+        speed_mode: named serving :class:`~repro.serving.latency_model.
+            SpeedMode` ("fp16" | "int8" | "speculative") applied to the
+            latency oracle; None = vanilla fp16.
+    """
     policy: str = "tris"            # none | tfs | tris | continuous
     max_batch: int = 8              # window cap / continuous decode slots
     timeout_s: float = 0.005
@@ -70,10 +89,37 @@ class SoftwareSpec:
     max_prefill: int = 8            # continuous: joins per iteration
     int8: bool = False              # the paper's INT8-conversion step
     use_pallas_kernels: bool = True
+    speed_mode: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class BenchmarkJobSpec:
+    """One fully-specified benchmark task (the paper's YAML job).
+
+    Attributes:
+        job_id: unique submission id (string, user-chosen).
+        user: submitting user (display/bookkeeping only).
+        model: the :class:`ModelRef` under test.
+        hardware: hardware-tier key in ``repro.hw.HARDWARE``.
+        chips: accelerator chips per replica (weights/KV sharded).
+        software: serving :class:`SoftwareSpec` (policy + options).
+        workload: request-arrival :class:`WorkloadSpec`.
+        cluster: multi-replica :class:`ClusterSpec` (routing, scaling).
+        network: client-side network model key (``lan`` | ``wifi`` |
+            ``4g`` | ...), see ``repro.serving.latency_model.NETWORKS``.
+        scenario: named production scenario filling workload/SLO
+            defaults (``repro.scenarios.profiles``); explicit fields win.
+        slo_latency_s: end-to-end request latency SLO (seconds), or
+            None for no latency SLO.
+        slo_ttft_s: time-to-first-token SLO (seconds); enables goodput.
+        slo_tpot_s: time-per-output-token SLO (seconds/token).
+        metrics: metric groups to evaluate (names, e.g. "latency").
+        est_processing_s: scheduler runtime hint (seconds).
+        profile: calibrated-profile ref (JSON path or
+            ``model@hardware``) replacing the analytic oracle.
+        obs: observability opt-in (:class:`~repro.obs.spec.ObsSpec`);
+            None = fast path with aggregate metrics only.
+    """
     job_id: str
     user: str = "dev"
     model: ModelRef = ModelRef()
@@ -214,6 +260,33 @@ class CalibrationSpec:
     kernel-validated analytic roofline oracle.  The resulting records
     land in PerfDB under ``kind="calibration"`` and the least-squares
     fit is persisted as a named profile when ``profile_dir`` is set.
+
+    Attributes:
+        job_id: unique submission id.
+        user: submitting user.
+        model: the :class:`ModelRef` to calibrate.
+        hardware: hardware-tier key in ``repro.hw.HARDWARE``.
+        chips: chips per replica the fit is valid for.
+        batches: batch sizes swept (requests per step).
+        seqs: prefill prompt lengths swept (tokens).
+        contexts: decode KV context lengths swept (tokens); empty
+            means reuse ``seqs``.
+        mode: ``auto`` | ``measured`` (wall-clock CPU) | ``oracle``
+            (analytic roofline).
+        repeats: measured-mode timing iterations per grid point
+            (min-of-N per pass, two passes).
+        holdout_fraction: fraction of grid points held out to score
+            fit generalization (0 disables).
+        profile_dir: directory the fitted profile JSON is saved to
+            (None = don't persist).
+        kernels: Pallas kernels to microbench alongside the model
+            sweep (``repro.calibrate.kernel_bench`` registry names;
+            empty = skip).  Their per-kernel fits + derived speed
+            modes ride into the profile.
+        kernel_target: what the kernel sweep clocks — ``auto``
+            (reference on CPU, compiled kernel on TPU) | ``kernel`` |
+            ``reference``.
+        est_processing_s: scheduler runtime hint (seconds).
     """
     job_id: str
     user: str = "dev"
@@ -229,6 +302,8 @@ class CalibrationSpec:
                                         # (min-of-N per pass, two passes)
     holdout_fraction: float = 0.25      # grid points held out for validation
     profile_dir: Optional[str] = None   # save the fitted profile JSON here
+    kernels: Sequence[str] = ()         # Pallas kernels to microbench too
+    kernel_target: str = "auto"         # auto | kernel | reference
     est_processing_s: float = 1.0       # scheduler hint
 
     kind = "calibration"
@@ -236,7 +311,7 @@ class CalibrationSpec:
     def __post_init__(self):
         if isinstance(self.model, dict):
             object.__setattr__(self, "model", ModelRef(**self.model))
-        for field in ("batches", "seqs", "contexts"):
+        for field in ("batches", "seqs", "contexts", "kernels"):
             val = getattr(self, field)
             if isinstance(val, list):
                 object.__setattr__(self, field, tuple(val))
@@ -259,6 +334,43 @@ class PlanSpec:
     the cluster simulator over a replicas × batching-policy × router
     grid, and reports the cheapest configuration whose SLO attainment
     meets ``slo_target``.
+
+    Attributes:
+        job_id: unique submission id.
+        profile: calibration-profile ref — JSON path or
+            ``model@hardware`` key resolved in ``profile_dir``.
+        user: submitting user.
+        profile_dir: directory ``model@hardware`` keys resolve in.
+        workload: aggregate request-arrival :class:`WorkloadSpec`.
+        tenants: multi-tenant split (TenantSpec list/dicts); the plan
+            then requires every tenant's own SLOs at ``slo_target``.
+        slo_latency_s: end-to-end latency SLO (seconds); None = only
+            phase SLOs apply.
+        slo_target: required attainment fraction in [0, 1].
+        ttft_slo_s: time-to-first-token SLO (seconds).
+        tpot_slo_s: time-per-output-token SLO (seconds/token).
+        replicas: replica counts searched.
+        policies: batching policies searched.
+        routers: router kinds searched.
+        max_batch: decode-slot cap used when ``max_batches`` is empty
+            (requests).
+        max_batches: decode-slot grid (requests); empty =
+            ``(max_batch,)``.
+        max_prefill: prefill admissions per engine iteration.
+        prefill_decode_splits: disaggregated (prefill, decode) replica
+            splits added to the grid.
+        kv_network: interconnect for the disaggregated KV handoff.
+        network: client network model key.
+        objective: SLO-feasible candidates are ranked by this summary
+            metric (e.g. ``cost_per_1k_req``, USD per 1000 requests).
+        speed_modes: serving speed modes searched ("fp16" | "int8" |
+            "speculative" names, or SpeedMode parameter dicts); empty =
+            fp16 only.  Calibrated parameters in the profile's
+            ``speed_modes`` section override the named presets.
+        memory: per-replica HBM budget
+            (:class:`~repro.serving.memory.MemorySpec`); candidates
+            whose KV working set cannot fit are rejected up front.
+        est_processing_s: scheduler runtime hint (seconds).
     """
     job_id: str
     profile: str                         # profile path or model@hardware key
@@ -288,6 +400,10 @@ class PlanSpec:
     kv_network: str = "infiniband"
     network: str = "lan"
     objective: str = "cost_per_1k_req"   # minimized among SLO-feasible
+    # serving speed modes searched alongside the hardware/software grid;
+    # names resolve through the profile's calibrated ``speed_modes``
+    # section first, then the built-in presets
+    speed_modes: Sequence[Any] = ()
     # KV-cache awareness: when set, candidates whose working set exceeds
     # the per-replica HBM budget are rejected up front (with the reason),
     # and feasible candidates are simulated under that budget.  Fitted
@@ -310,7 +426,8 @@ class PlanSpec:
                                coerce_tenants(self.tenants))
         else:
             object.__setattr__(self, "tenants", ())
-        for field in ("replicas", "policies", "routers", "max_batches"):
+        for field in ("replicas", "policies", "routers", "max_batches",
+                      "speed_modes"):
             val = getattr(self, field)
             if isinstance(val, list):
                 object.__setattr__(self, field, tuple(val))

@@ -25,6 +25,167 @@ COLD_START_DISK_BW = 2e9       # bytes/s from checkpoint storage
 COLD_START_CONST_S = 2.0       # runtime + compile cache init
 
 
+# --- speed modes ------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SpeedMode:
+    """A serving *speed mode*: a named bundle of roofline scale factors
+    plus an optional speculative-decoding model.
+
+    Quantization is expressed as byte/FLOP scale factors applied to the
+    roofline terms of an oracle (``weight_bytes_scale`` and
+    ``kv_bytes_scale`` shrink the memory terms and the KV footprint the
+    ``KVCacheManager`` charges; ``compute_scale`` models quant/dequant
+    overhead on the compute term).  Speculative decoding is expressed as
+    a draft/verify cycle: a draft model proposes ``draft_len`` tokens at
+    ``draft_cost_frac`` of a target decode step each, the target verifies
+    them in one step, and on average ``expected_tokens_per_cycle()``
+    tokens are emitted per cycle — so effective per-token decode latency
+    is the base latency times ``decode_cost_factor()``.
+
+    Attributes (all scales dimensionless):
+        name: mode identifier ("fp16", "int8", "speculative", ...).
+        weight_bytes_scale: resident-weight bytes multiplier (int8 = 0.5
+            of bf16).
+        kv_bytes_scale: per-token KV-cache bytes multiplier; < 1 means
+            more sequences fit a fixed HBM budget.
+        compute_scale: FLOP-term multiplier (> 1 models quantize /
+            dequantize overhead).
+        draft_len: speculative draft tokens per cycle (k); 0 disables
+            speculation.
+        acceptance_rate: probability a ∈ [0, 1] each draft token is
+            accepted (position-independent, the standard geometric
+            model).
+        draft_cost_frac: cost of one draft-model step as a fraction of a
+            target decode step.
+    """
+    name: str = "fp16"
+    weight_bytes_scale: float = 1.0
+    kv_bytes_scale: float = 1.0
+    compute_scale: float = 1.0
+    draft_len: int = 0
+    acceptance_rate: float = 0.0
+    draft_cost_frac: float = 1.0
+
+    def __post_init__(self):
+        if not (0.0 < self.weight_bytes_scale
+                and 0.0 < self.kv_bytes_scale
+                and 0.0 < self.compute_scale):
+            raise ValueError(f"speed mode {self.name!r}: scale factors "
+                             "must be positive")
+        if self.draft_len < 0:
+            raise ValueError(f"speed mode {self.name!r}: draft_len must "
+                             "be >= 0")
+        if not 0.0 <= self.acceptance_rate <= 1.0:
+            raise ValueError(f"speed mode {self.name!r}: acceptance_rate "
+                             "must be in [0, 1]")
+        if self.draft_cost_frac < 0.0:
+            raise ValueError(f"speed mode {self.name!r}: draft_cost_frac "
+                             "must be >= 0")
+
+    @property
+    def is_identity(self) -> bool:
+        """True when the mode changes nothing (vanilla fp16 serving)."""
+        return (self.weight_bytes_scale == 1.0
+                and self.kv_bytes_scale == 1.0
+                and self.compute_scale == 1.0
+                and self.draft_len == 0)
+
+    def expected_tokens_per_cycle(self) -> float:
+        """E[tokens emitted per draft/verify cycle] = (1-a^(k+1))/(1-a).
+
+        With ``draft_len=k`` drafts the cycle emits the accepted prefix
+        plus the verifier's one corrected/bonus token: 1 + a + … + a^k.
+        Equals ``k+1`` exactly at ``acceptance_rate=1`` and 1 with no
+        drafting.
+        """
+        k, a = self.draft_len, self.acceptance_rate
+        if k <= 0:
+            return 1.0
+        if a >= 1.0:
+            return float(k + 1)
+        return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+    def decode_cost_factor(self) -> float:
+        """Multiplier on base decode latency per *emitted* token.
+
+        One cycle costs ``1 + draft_len·draft_cost_frac`` target-step
+        equivalents (the verify step scores all drafts in one pass —
+        decode is memory-bound, so verifying k+1 positions reads the
+        same weights/KV as one step) and emits
+        ``expected_tokens_per_cycle()`` tokens.  With
+        ``acceptance_rate=1`` and ``draft_cost_frac=1`` the factor is
+        exactly 1.0 — a draft as expensive as the target buys nothing.
+        """
+        if self.draft_len <= 0:
+            return 1.0
+        cycle_cost = 1.0 + self.draft_len * self.draft_cost_frac
+        return cycle_cost / self.expected_tokens_per_cycle()
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SpeedMode":
+        return cls(**d)
+
+
+#: Named presets the planner and specs resolve by string.  ``int8``
+#: halves weight + KV bytes (bf16 → int8) with a small dequant compute
+#: penalty, so it wins where serving is KV/memory-bound and loses where
+#: it is compute-bound.  ``speculative`` uses a 4-token draft at 30% of
+#: target step cost with the conventional ~0.7 acceptance rate.
+SPEED_MODES: Dict[str, SpeedMode] = {
+    "fp16": SpeedMode("fp16"),
+    "int8": SpeedMode("int8", weight_bytes_scale=0.5, kv_bytes_scale=0.5,
+                      compute_scale=1.05),
+    "speculative": SpeedMode("speculative", draft_len=4,
+                             acceptance_rate=0.7, draft_cost_frac=0.3),
+}
+
+
+def resolve_speed_mode(mode, overrides: Optional[dict] = None) -> SpeedMode:
+    """Coerce ``mode`` (SpeedMode | name | dict | None) to a SpeedMode.
+
+    ``overrides`` maps mode names to parameter dicts (e.g. calibrated
+    values from a profile's ``speed_modes`` section) consulted before
+    the built-in :data:`SPEED_MODES` presets.
+    """
+    if mode is None:
+        return SPEED_MODES["fp16"]
+    if isinstance(mode, SpeedMode):
+        return mode
+    if isinstance(mode, dict):
+        return SpeedMode.from_dict(mode)
+    if isinstance(mode, str):
+        if overrides and mode in overrides:
+            ov = dict(overrides[mode])
+            ov.setdefault("name", mode)
+            return SpeedMode.from_dict(ov)
+        if mode in SPEED_MODES:
+            return SPEED_MODES[mode]
+        raise KeyError(f"unknown speed mode {mode!r} "
+                       f"(known: {sorted(SPEED_MODES)})")
+    raise TypeError(f"cannot resolve speed mode from {type(mode).__name__}")
+
+
+def apply_speed_mode(oracle: "LatencyOracle", mode) -> "LatencyOracle":
+    """Return an oracle serving under ``mode`` (identity modes pass the
+    oracle through untouched).
+
+    Oracles that know their roofline decomposition
+    (:class:`LatencyModel`, :class:`FittedLatencyModel`) implement
+    ``with_speed_mode`` and get exact per-term scaling; anything else is
+    wrapped in a conservative :class:`SpeedModeOracle`.
+    """
+    mode = resolve_speed_mode(mode)
+    if mode.is_identity:
+        return oracle
+    with_mode = getattr(oracle, "with_speed_mode", None)
+    if with_mode is not None:
+        return with_mode(mode)
+    return SpeedModeOracle(oracle, mode)
+
+
 class LatencyOracle:
     """Shared per-request composition over a prefill/decode split.
 
@@ -86,11 +247,24 @@ class LatencyOracle:
 
 @dataclasses.dataclass
 class LatencyModel(LatencyOracle):
+    """Analytic roofline oracle for ``cfg`` served on ``chips`` × ``hw``.
+
+    Attributes:
+        cfg: architecture being served.
+        hw: hardware model (peak FLOPs, HBM bandwidth, $/hr).
+        chips: chips per replica (weights + KV sharded across them).
+        serve_bytes_per_param: resident bytes per weight (2.0 = bf16).
+        int8: legacy shim — sets ``serve_bytes_per_param`` to 1.0
+            (weight-only quantization; superseded by ``speed_mode``).
+        speed_mode: optional :class:`SpeedMode` scaling the roofline
+            terms (weights/KV/compute) and the effective decode step.
+    """
     cfg: ModelConfig
     hw: hw_lib.HardwareModel = hw_lib.TPU_V5E
     chips: int = 1
     serve_bytes_per_param: float = 2.0     # bf16 weights
     int8: bool = False
+    speed_mode: Optional[SpeedMode] = None
 
     def __post_init__(self):
         self.flops_per_token = model_flops_per_token(self.cfg) / 3.0  # fwd
@@ -99,6 +273,11 @@ class LatencyModel(LatencyOracle):
         self.n_params = count_params(param_shapes(build_model(self.cfg)))
         if self.int8:
             self.serve_bytes_per_param = 1.0
+        mode = self.speed_mode
+        self._compute_scale = mode.compute_scale if mode else 1.0
+        self._kv_scale = mode.kv_bytes_scale if mode else 1.0
+        self._weight_scale = mode.weight_bytes_scale if mode else 1.0
+        self._decode_factor = mode.decode_cost_factor() if mode else 1.0
         # per-model constants the simulator's hot path would otherwise
         # re-derive on every engine iteration (layer_kinds() builds a
         # fresh tuple per call); values and accumulation order are
@@ -107,7 +286,12 @@ class LatencyModel(LatencyOracle):
         self._attn_kinds = tuple(k for k in kinds
                                  if k in ("attn_global", "attn_local"))
         self._n_attn = sum(k.startswith("attn") for k in kinds)
-        self._weight_bytes = self.n_params * self.serve_bytes_per_param
+        self._weight_bytes = (self.n_params * self.serve_bytes_per_param
+                              * self._weight_scale)
+
+    def with_speed_mode(self, mode: SpeedMode) -> "LatencyModel":
+        """This model re-derived under ``mode`` (fresh latency caches)."""
+        return dataclasses.replace(self, speed_mode=mode)
 
     # ---- analytic per-phase latencies -----------------------------------
     def _kv_bytes_per_token(self) -> float:
@@ -117,7 +301,7 @@ class LatencyModel(LatencyOracle):
         v = getattr(self, "_kv_bpt", None)
         if v is None:
             from repro.analysis.memory_model import kv_bytes_per_token
-            v = self._kv_bpt = kv_bytes_per_token(self.cfg)
+            v = self._kv_bpt = kv_bytes_per_token(self.cfg) * self._kv_scale
         return v
 
     # ---- memory-subsystem hooks (repro.serving.memory) -------------------
@@ -127,7 +311,7 @@ class LatencyModel(LatencyOracle):
 
     def weight_bytes(self) -> float:
         """Resident serving weights on one replica (all chips pooled)."""
-        return self.n_params * self.serve_bytes_per_param
+        return self._weight_bytes
 
     def prefill_latency(self, batch: int, prompt: int) -> float:
         cfg = self.cfg
@@ -140,7 +324,8 @@ class LatencyModel(LatencyOracle):
                 span = min(cfg.local_window or prompt, prompt)
             flops += 4 * batch * prompt * span * cfg.num_heads * cfg.head_dim / 2
         act_bytes = 8 * batch * prompt * cfg.d_model * 2.0 * cfg.num_layers
-        compute_s = flops / (self.chips * self.hw.peak_flops)
+        compute_s = flops * self._compute_scale \
+            / (self.chips * self.hw.peak_flops)
         memory_s = (self._weight_bytes / self.chips + act_bytes / self.chips) \
             / self.hw.hbm_bw
         return max(compute_s, memory_s) + LAUNCH_OVERHEAD_S
@@ -151,10 +336,12 @@ class LatencyModel(LatencyOracle):
         flops += 4 * batch * min(context, 1 << 30) * cfg.num_heads \
             * cfg.head_dim * self._n_attn
         kv_bytes = batch * context * self._kv_bytes_per_token()
-        compute_s = flops / (self.chips * self.hw.peak_flops)
+        compute_s = flops * self._compute_scale \
+            / (self.chips * self.hw.peak_flops)
         memory_s = (self._weight_bytes + kv_bytes) \
             / (self.chips * self.hw.hbm_bw)
-        return max(compute_s, memory_s) + LAUNCH_OVERHEAD_S
+        return (max(compute_s, memory_s) + LAUNCH_OVERHEAD_S) \
+            * self._decode_factor
 
     def cold_start(self) -> float:
         return COLD_START_CONST_S + self._weight_bytes \
@@ -213,6 +400,29 @@ class FittedLatencyModel(LatencyOracle):
     def cold_start(self) -> float:
         return self.cold_start_s
 
+    def with_speed_mode(self, mode: SpeedMode) -> "FittedLatencyModel":
+        """Re-derive the fitted coefficients under ``mode``.
+
+        The mapping follows each coefficient's roofline meaning (see the
+        class docstring): decode ``d0`` is the batch-independent weight
+        read (× ``weight_bytes_scale``), ``α`` the per-sequence compute
+        (× ``compute_scale``), ``β`` the per-cached-token KV read
+        (× ``kv_bytes_scale``); the whole decode step is then divided
+        among the tokens a speculative cycle emits
+        (× ``decode_cost_factor()``).  Prefill is compute-bound at
+        calibration batch sizes, so only its token terms scale.
+        """
+        p0, p1, p2 = self.prefill_coef
+        d0, alpha, beta = self.decode_coef
+        cs, f = mode.compute_scale, mode.decode_cost_factor()
+        return dataclasses.replace(
+            self,
+            prefill_coef=(p0, p1 * cs, p2 * cs),
+            decode_coef=(d0 * mode.weight_bytes_scale * f,
+                         alpha * cs * f,
+                         beta * mode.kv_bytes_scale * f),
+            name=f"{self.name}+{mode.name}")
+
     @classmethod
     def from_profile(cls, profile) -> "FittedLatencyModel":
         """Build the oracle from a ``CalibrationProfile``, its dict form,
@@ -234,6 +444,53 @@ class FittedLatencyModel(LatencyOracle):
                    hw=hw, chips=profile.chips,
                    cold_start_s=profile.cold_start_s,
                    name=profile.key)
+
+
+class SpeedModeOracle(LatencyOracle):
+    """Generic :class:`SpeedMode` wrapper for oracles without a native
+    ``with_speed_mode``.
+
+    Without a roofline decomposition the byte scales cannot be applied
+    per-term, so the wrapper is conservative: prefill scales by
+    ``compute_scale`` only, decode by ``max(compute_scale,
+    kv_bytes_scale)`` times the speculative ``decode_cost_factor()``.
+    KV/weight memory hooks are forwarded scaled when the base oracle
+    exposes them.
+    """
+
+    def __init__(self, base: LatencyOracle, mode: SpeedMode):
+        self.base = base
+        self.mode = mode
+        # duck-typed bases (tests, ad-hoc oracles) may not carry hardware
+        # identity; fall back to the oracle defaults so cost accounting
+        # still runs
+        self.hw = getattr(base, "hw", None) or hw_lib.HARDWARE["tpu-v5e"]
+        self.chips = getattr(base, "chips", 1)
+        self._decode_scale = (max(mode.compute_scale, mode.kv_bytes_scale)
+                              * mode.decode_cost_factor())
+
+    def prefill_latency(self, batch: int, prompt: int) -> float:
+        return self.base.prefill_latency(batch, prompt) \
+            * self.mode.compute_scale
+
+    def decode_latency(self, batch: int, context: int) -> float:
+        return self.base.decode_latency(batch, context) * self._decode_scale
+
+    # memory hooks exist only when the base oracle has them, so the
+    # duck-typed probes in repro.serving.memory behave as if they were
+    # looking at the base directly
+    def __getattr__(self, name):
+        if name in ("base", "mode"):       # guard pre-__init__ recursion
+            raise AttributeError(name)
+        if name == "kv_bytes_per_token":
+            base_fn = self.base.kv_bytes_per_token
+            return lambda: base_fn() * self.mode.kv_bytes_scale
+        if name == "weight_bytes":
+            base_fn = self.base.weight_bytes
+            return lambda: base_fn() * self.mode.weight_bytes_scale
+        if name == "cold_start":
+            return self.base.cold_start
+        raise AttributeError(name)
 
 
 @dataclasses.dataclass

@@ -79,6 +79,27 @@ class MemorySpec:
         return cls(**dict(d))
 
 
+def scaled_memory_spec(spec: Optional[MemorySpec],
+                       mode) -> Optional[MemorySpec]:
+    """A :class:`MemorySpec` adjusted for serving under a
+    :class:`~repro.serving.latency_model.SpeedMode`.
+
+    Only an *explicitly set* ``kv_bytes_per_token`` needs rescaling
+    (quantized KV entries are smaller, so the same HBM budget holds
+    more tokens); oracle-derived footprints flow through the oracle's
+    own speed-mode-scaled ``kv_bytes_per_token``/``weight_bytes`` hooks.
+    An explicit ``num_blocks`` is a byte-free what-if knob and is left
+    untouched.
+    """
+    if spec is None or mode is None:
+        return spec
+    scale = getattr(mode, "kv_bytes_scale", 1.0)
+    if scale == 1.0 or spec.kv_bytes_per_token <= 0:
+        return spec
+    return dataclasses.replace(
+        spec, kv_bytes_per_token=spec.kv_bytes_per_token * scale)
+
+
 def oracle_kv_bytes_per_token(oracle) -> float:
     """Per-token KV footprint of a latency oracle, or 0.0 when the oracle
     carries no model config (fitted calibration profiles).  Shared by the

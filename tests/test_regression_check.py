@@ -133,7 +133,7 @@ class TestMainExitCodes:
         assert baseline["metrics"], "empty committed baseline"
         for name, entry in baseline["metrics"].items():
             ns, _, rest = name.partition(":")
-            assert ns in ("cluster", "calibrate", "sim") and rest, name
+            assert ns in ("cluster", "calibrate", "sim", "kernels") and rest, name
             assert entry["direction"] in ("higher", "lower", "near")
             float(entry["value"])
         # the issue's headline metrics are all gated
@@ -147,3 +147,6 @@ class TestMainExitCodes:
         assert any("fairness" in k for k in keys)
         # the simulator lane gates its own event-loop throughput
         assert any("sim_events_per_sec" in k for k in keys)
+        # the kernel lane gates reference residuals + the speed-mode win
+        assert any("max_err_vs_ref" in k for k in keys)
+        assert any("best_is_non_fp16" in k for k in keys)
