@@ -1,7 +1,7 @@
 """Cluster-scale serving: throughput & p99-SLO attainment across
 replicas × batching policy × router.
 
-Six sections:
+Eight sections:
   (a) ramp knee-finding — window vs preferred vs continuous batching on a
       stepped-rate generation workload (continuous should win throughput
       at equal-or-better p99);
@@ -22,7 +22,13 @@ Six sections:
       goodput within tolerance when the big tenant bursts (isolation);
       and a tenant-mix capacity plan's cheapest-feasible config must
       survive independent re-simulation with every tenant meeting its
-      own SLOs.
+      own SLOs;
+  (h) heterogeneous fleet — a mixed v5e+t4 fleet must beat the all-v5e
+      fleet on cost per goodput at equal SLO attainment, turning the t4
+      pool spot must cut the bill further with bounded preemption-induced
+      goodput loss, and the capacity planner searching the fleet grid
+      under ``cost_per_goodput`` must discover the winning fleet itself
+      (winner re-simulated at >= 0.9 attainment).
 
 ``--smoke`` shrinks durations/grids for CI; ``--json PATH`` additionally
 writes the metrics dict to PATH (the perf-regression lane's input).
@@ -39,7 +45,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from repro.configs import get_config
 from repro.core.analysis import saturation_knee
 from repro.serving.batching import make_policy
-from repro.serving.cluster import ClusterSpec, DisaggSpec, simulate_cluster
+from repro.serving.cluster import (ClusterSpec, DisaggSpec, PoolSpec,
+                                   simulate_cluster)
 from repro.serving.latency_model import LatencyModel
 from repro.serving.memory import MemorySpec
 from repro.serving.simulator import simulate
@@ -265,6 +272,95 @@ def disaggregation_smoke(lm, smoke, out):
          f"colocated {col['tpot_p99_s']:.4f}s")
 
 
+def mixed_fleet_smoke(lm, smoke, out):
+    """(h) heterogeneous fleet: swapping half the v5e replicas for cheap
+    t4s must cut cost per goodput at equal SLO attainment, spot pricing
+    on the t4 pool must cut it further with bounded preemption-induced
+    goodput loss, and the planner must find the winning fleet itself."""
+    from repro.calibrate.planner import plan_capacity, simulate_candidate
+
+    slo = 0.4  # e2e; loose enough that a healthy t4 pool can meet it
+    wl = _gen_workload(rate=120, duration_s=3 if smoke else 6, seed=21)
+    mixed = ({"name": "v5e", "replicas": 2},
+             {"name": "t4", "hardware": "t4", "replicas": 2})
+    spot = ({"name": "v5e", "replicas": 2},
+            {"name": "t4", "hardware": "t4", "replicas": 2,
+             "pricing": "spot", "preempt_mtbf_s": 2.0})
+    fleets = {
+        "all_v5e": (PoolSpec(name="v5e", replicas=4),),
+        "mixed": tuple(PoolSpec.from_dict(p) for p in mixed),
+        "mixed_spot": tuple(PoolSpec.from_dict(p) for p in spot),
+    }
+    stats = {}
+    for label, pools in fleets.items():
+        res, us = timed(
+            simulate_cluster, wl,
+            make_policy("continuous", max_batch=16, max_prefill=8), lm,
+            cluster=ClusterSpec(pools=pools, router="cost-weighted"))
+        gp = res.goodput(e2e_slo_s=slo)
+        s = {
+            "slo_attainment": res.slo_attainment(slo),
+            "goodput_rps": gp,
+            "cost_usd": res.cost_usd(),
+            "cost_per_goodput": res.cost_usd() / (gp * res.duration_s)
+            if gp > 0 else float("inf"),
+            "spot_preemptions": res.fleet["spot_preemptions"],
+            "goodput_loss_rps": res.preemption_goodput_loss(e2e_slo_s=slo),
+        }
+        stats[label] = s
+        out[f"fleet/{label}"] = s
+        emit(f"cluster.fleet.{label}", us,
+             f"att={s['slo_attainment']:.3f};"
+             f"cost_per_goodput={s['cost_per_goodput']:.3e};"
+             f"kills={s['spot_preemptions']}")
+    v5e, mix, spt = (stats[k] for k in ("all_v5e", "mixed", "mixed_spot"))
+    emit("cluster.finding.mixed_beats_flat", 0.0,
+         f"cpg_ratio={v5e['cost_per_goodput'] / mix['cost_per_goodput']:.2f}x;"
+         f"target>1x")
+    assert mix["slo_attainment"] >= v5e["slo_attainment"] - 1e-9, \
+        "mixed fleet lost SLO attainment vs all-v5e"
+    assert mix["cost_per_goodput"] < v5e["cost_per_goodput"], \
+        (f"mixed fleet cost/goodput {mix['cost_per_goodput']:.3e} did not "
+         f"beat all-v5e {v5e['cost_per_goodput']:.3e}")
+    assert spt["spot_preemptions"] > 0, \
+        "spot pool saw no kills — the preemption path went unexercised"
+    assert spt["cost_usd"] < mix["cost_usd"], \
+        (f"spot fleet bill {spt['cost_usd']:.5f} not below reserved "
+         f"{mix['cost_usd']:.5f}")
+    assert spt["goodput_loss_rps"] <= 0.05 * spt["goodput_rps"], \
+        (f"preemption-induced goodput loss {spt['goodput_loss_rps']:.2f}rps "
+         f"exceeds 5% of goodput {spt['goodput_rps']:.1f}rps")
+
+    # plan over the fleet grid: the spot-backed mixed fleet must win on
+    # $/goodput-req against both the reserved mix and a flat cluster,
+    # and the winner must survive independent re-simulation
+    target = 0.9
+    plan, us = timed(plan_capacity, lm, wl, slo_latency_s=slo,
+                     slo_target=target, replicas=(3,),
+                     policies=("continuous",), routers=("cost-weighted",),
+                     max_batch=16, objective="cost_per_goodput",
+                     fleets=(mixed, spot))
+    best = plan.best
+    assert best is not None, "no feasible fleet for the workload"
+    assert best.fleet is not None, \
+        "planner picked the flat cluster over the cheaper mixed fleets"
+    assert any(p["pricing"] == "spot" for p in best.fleet), \
+        "planner left the spot discount on the table"
+    res = simulate_candidate(lm, wl, best)
+    resim_att = res.slo_attainment(slo)
+    assert resim_att >= target, \
+        (f"re-simulated fleet winner attains {resim_att:.2f} < {target}")
+    out["fleet/plan"] = {
+        "pools": [f"{p['replicas']}x{p['hardware'] or 'base'}"
+                  f"({p['pricing']})" for p in best.fleet],
+        "cost_per_goodput": best.objective,
+        "resim_attainment": resim_att,
+    }
+    emit("cluster.fleet.plan", us,
+         f"best={'+'.join(out['fleet/plan']['pools'])};"
+         f"obj={best.objective:.3e};resim_att={resim_att:.2f}")
+
+
 def scenario_section(lm, smoke, out):
     """(g) scenario library: burstiness vs volume, tenant isolation, and
     plan-then-verify for a tenant mix."""
@@ -386,6 +482,7 @@ def run(smoke: bool = False, json_path: str | None = None) -> None:
     memory_pressure(lm, smoke, out)
     disaggregation_smoke(lm, smoke, out)
     scenario_section(lm, smoke, out)
+    mixed_fleet_smoke(lm, smoke, out)
     # knee of the ramp per policy (for the writeup)
     wl = _gen_workload(kind="ramp", duration_s=2 if smoke else 6,
                        ramp_min_rate=50, ramp_max_rate=500,

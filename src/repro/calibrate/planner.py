@@ -17,7 +17,8 @@ from typing import Any, Dict, List, Optional, Sequence
 from repro.calibrate.profile import CalibrationProfile, load_profile
 from repro.core.results import JobResult
 from repro.core.spec import PlanSpec
-from repro.serving.cluster import ClusterSpec, DisaggSpec, simulate_cluster
+from repro.serving.cluster import (ClusterSpec, DisaggSpec, PoolSpec,
+                                   simulate_cluster)
 from repro.serving.latency_model import (NETWORKS, SpeedMode,
                                          apply_speed_mode,
                                          resolve_speed_mode)
@@ -37,7 +38,10 @@ class PlanCandidate:
     disaggregated candidate, None for colocated; ``replicas`` is always
     the total chip-normalizing replica count.  ``speed_mode`` names the
     serving mode the candidate was simulated under ("fp16" when the
-    plan searched none).
+    plan searched none).  ``fleet`` is the heterogeneous composition the
+    candidate simulated — a tuple of ``PoolSpec`` dicts (JSON-able, and
+    accepted back by ``ClusterSpec(pools=...)``) — or None for a flat
+    identical-replica cluster.
     """
     replicas: int
     policy: str
@@ -49,6 +53,7 @@ class PlanCandidate:
     split: Optional[Sequence[int]] = None
     speed_mode: str = "fp16"
     infeasible_reason: Optional[str] = None
+    fleet: Optional[Sequence[Dict[str, Any]]] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -141,7 +146,8 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                   network: str = "lan",
                   objective: str = "cost_per_1k_req",
                   speed_modes: Sequence[Any] = (),
-                  memory: Optional[MemorySpec] = None) -> PlanResult:
+                  memory: Optional[MemorySpec] = None,
+                  fleets: Sequence[Any] = ()) -> PlanResult:
     """Search the configuration grid for the cheapest SLO-meeting setup.
 
     ``profile`` may be a :class:`CalibrationProfile`, its dict/JSON-path/
@@ -183,6 +189,17 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
     config when it wins on the objective.  Names resolve through the
     profile's calibrated ``speed_modes`` section first, then the
     built-in presets.
+
+    ``fleets`` adds heterogeneous compositions to the grid: each entry
+    is a sequence of ``PoolSpec``s (or their dicts) — e.g. 2×v5e
+    reserved + a spot t4 overflow pool vs. 3×v5e reserved — simulated
+    under every router/policy/slot combination, so the planner can
+    answer the paper's headline question (which *mix* of devices serves
+    this traffic cheapest) under the same ``cost_per_goodput``
+    objective.  Fleets with spot preemption pair only with continuous
+    policies (kills requeue through the decode loop); per-pool memory
+    grounding happens inside the simulation, so infeasible fleet
+    budgets surface as ``KVBudgetError`` rejections.
     """
     tenant_specs = ()
     if tenants:
@@ -223,9 +240,9 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
         if all(sm.name != seen.name for seen in modes):
             modes.append(sm)
 
-    # grid rows: (total_replicas, policy, router, max_batch, split)
+    # grid rows: (total_replicas, policy, router, max_batch, split, fleet)
     grid: List[tuple] = [
-        (int(n), pol, router, int(mb), None)
+        (int(n), pol, router, int(mb), None, None)
         for n, pol, router, mb in itertools.product(replicas, policies,
                                                     routers, mbs)]
     # disaggregation needs a decode loop to migrate into, so split
@@ -237,7 +254,19 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
         pre, dec = int(split[0]), int(split[1])
         for pol, router, mb in itertools.product(disagg_pols, routers,
                                                  mbs):
-            grid.append((pre + dec, pol, router, int(mb), (pre, dec)))
+            grid.append((pre + dec, pol, router, int(mb), (pre, dec),
+                         None))
+    # heterogeneous compositions: one row per fleet × policy × router ×
+    # slots (spot-preempting fleets need the continuous decode loop)
+    for f in fleets:
+        pools = tuple(PoolSpec.from_dict(p) if isinstance(p, dict) else p
+                      for p in f)
+        n = sum(p.replicas for p in pools)
+        fleet_pols = disagg_pols \
+            if any(p.preempt_mtbf_s > 0 for p in pools) else policies
+        for pol, router, mb in itertools.product(fleet_pols, routers,
+                                                 mbs):
+            grid.append((n, pol, router, int(mb), None, pools))
 
     # the static memory check sizes at the longest-context slice of the
     # traffic; for a tenant mix that is each tenant's own specialized
@@ -254,9 +283,14 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
         # explicit memory budget re-grounds at the smaller KV entry size
         oracle_m = apply_speed_mode(oracle, mode)
         memory_m = scaled_memory_spec(memory, mode)
-        for n, pol, router, mb, split in grid:
+        for n, pol, router, mb, split, fleet in grid:
+            fleet_dicts = tuple(dataclasses.asdict(p) for p in fleet) \
+                if fleet is not None else None
             reason = None
-            if memory_m is not None:
+            # fleet budgets ground per pool against each pool's own
+            # oracle inside the simulation, so the flat working-set
+            # estimate doesn't apply — KVBudgetError covers them below
+            if memory_m is not None and fleet is None:
                 reason = next(
                     (r for r in (_memory_working_set_reason(memory_m,
                                                             oracle_m,
@@ -270,7 +304,10 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                     max_batch=mb, split=split, speed_mode=mode.name,
                     infeasible_reason=reason))
                 continue
-            if split is None:
+            if fleet is not None:
+                cluster = ClusterSpec(pools=fleet, router=router,
+                                      memory=memory_m)
+            elif split is None:
                 cluster = ClusterSpec(replicas=n, router=router,
                                       memory=memory_m)
             else:
@@ -294,7 +331,7 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                     replicas=n, policy=pol, router=router, metrics={},
                     meets_slo=False, objective=float("inf"),
                     max_batch=mb, split=split, speed_mode=mode.name,
-                    infeasible_reason=str(exc)))
+                    infeasible_reason=str(exc), fleet=fleet_dicts))
                 continue
             if tenant_specs:
                 # a tenant mix is judged by its weakest member: every
@@ -333,7 +370,7 @@ def plan_capacity(profile, workload: WorkloadSpec, *,
                 replicas=n, policy=pol, router=router, metrics=metrics,
                 meets_slo=att >= slo_target,
                 objective=float(metrics[objective]), max_batch=mb,
-                split=split, speed_mode=mode.name))
+                split=split, speed_mode=mode.name, fleet=fleet_dicts))
     candidates.sort(key=lambda c: (not c.meets_slo, c.objective))
     return PlanResult(profile_key=key, slo_latency_s=slo_latency_s,
                       slo_target=slo_target, objective=objective,
@@ -376,7 +413,10 @@ def simulate_candidate(profile, workload: WorkloadSpec,
         from repro.scenarios.tenants import coerce_tenants
         workload = dataclasses.replace(workload,
                                        tenants=coerce_tenants(tenants))
-    if candidate.split is None:
+    if getattr(candidate, "fleet", None):
+        cluster = ClusterSpec(pools=candidate.fleet,
+                              router=candidate.router, memory=memory)
+    elif candidate.split is None:
         cluster = ClusterSpec(replicas=candidate.replicas,
                               router=candidate.router, memory=memory)
     else:
@@ -411,7 +451,7 @@ def plan_from_spec(spec: PlanSpec) -> PlanResult:
         kv_network=spec.kv_network,
         network=spec.network, objective=spec.objective,
         speed_modes=spec.speed_modes,
-        memory=spec.memory)
+        memory=spec.memory, fleets=spec.fleets)
 
 
 def run_plan_job(spec: PlanSpec) -> JobResult:

@@ -150,11 +150,30 @@ def fit_report(profile) -> str:
     return "\n".join(lines)
 
 
+def fleet_label(fleet) -> str:
+    """Compact one-line label for a fleet composition — a ``+``-joined
+    ``N×hardware`` term per pool, annotated with ``(spot)`` pricing and
+    ``@region`` placement when set (PoolSpec dicts or instances)."""
+    terms = []
+    for p in fleet:
+        if not isinstance(p, dict):
+            p = dataclasses.asdict(p)
+        term = f"{p.get('replicas', 1)}x{p.get('hardware') or 'base'}"
+        if p.get("pricing", "reserved") != "reserved":
+            term += f"({p['pricing']})"
+        if p.get("region"):
+            term += f"@{p['region']}"
+        terms.append(term)
+    return "+".join(terms)
+
+
 def plan_table(plan) -> str:
     """Render a ``PlanResult`` grid: feasible configs first, best starred;
     memory-rejected candidates print their rejection reason.  The
     ``split`` column shows disaggregated candidates as ``P+D``
-    (prefill+decode replicas), ``-`` for colocated."""
+    (prefill+decode replicas), ``-`` for colocated; the ``fleet``
+    column compacts heterogeneous compositions to
+    ``2xtpu-v5e+2xt4(spot)``, ``-`` for flat clusters."""
     best = plan.best
     slos = []
     if getattr(plan, "slo_latency_s", None) is not None:
@@ -166,7 +185,8 @@ def plan_table(plan) -> str:
     header = (f"capacity plan vs {plan.profile_key}: "
               f"SLO p({' ∧ '.join(slos)}) ≥ "
               f"{plan.slo_target:.0%}, minimize {plan.objective}")
-    cols = f"{'':2s}{'replicas':>9}{'split':>7}{'policy':>12}" \
+    cols = f"{'':2s}{'replicas':>9}{'split':>7}{'fleet':>24}" \
+           f"{'policy':>12}" \
            f"{'router':>14}{'slots':>7}{'mode':>12}{'thr rps':>9}" \
            f"{'p99 ms':>8}{'ttft99':>8}{'slo':>6}{plan.objective:>18}"
     lines = [header, cols]
@@ -175,8 +195,11 @@ def plan_table(plan) -> str:
         slots = getattr(c, "max_batch", 0) or "-"
         split = getattr(c, "split", None)
         split_s = f"{split[0]}+{split[1]}" if split else "-"
+        fleet = getattr(c, "fleet", None)
+        fleet_s = fleet_label(fleet) if fleet else "-"
         mode = getattr(c, "speed_mode", "fp16") or "fp16"
-        prefix = f"{'':2s}{c.replicas:>9}{split_s:>7}{c.policy:>12}" \
+        prefix = f"{'':2s}{c.replicas:>9}{split_s:>7}{fleet_s:>24}" \
+                 f"{c.policy:>12}" \
                  f"{c.router:>14}{slots:>7}{mode:>12}"
         if getattr(c, "infeasible_reason", None):
             lines.append(f"m {prefix[2:]}  REJECTED: {c.infeasible_reason}")

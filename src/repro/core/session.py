@@ -156,6 +156,10 @@ def run_stages(spec: AnyJobSpec) -> JobResult:
     }
     if res.pools is not None:
         cluster_info["pools"] = dict(res.pools)
+    if res.fleet is not None:
+        # heterogeneous-fleet provenance: per-pool hardware/pricing bill
+        # plus the spot/cross-region counters, preserved in the PerfDB
+        cluster_info["fleet"] = dict(res.fleet)
     return JobResult(
         spec=spec,
         metrics=metrics,

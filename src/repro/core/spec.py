@@ -370,6 +370,11 @@ class PlanSpec:
         memory: per-replica HBM budget
             (:class:`~repro.serving.memory.MemorySpec`); candidates
             whose KV working set cannot fit are rejected up front.
+        fleets: heterogeneous fleet compositions added to the grid —
+            each entry is a list of ``PoolSpec`` dicts (hardware,
+            replicas, pricing, region, ...), simulated under every
+            policy/router/slot combination so the plan can recommend a
+            device mix or a spot-backed fleet on the objective.
         est_processing_s: scheduler runtime hint (seconds).
     """
     job_id: str
@@ -409,6 +414,9 @@ class PlanSpec:
     # and feasible candidates are simulated under that budget.  Fitted
     # profiles carry no model config, so set hbm_gb + kv_bytes_per_token.
     memory: Optional[MemorySpec] = None
+    # fleet-composition axis: sequences of PoolSpec dicts (heterogeneous
+    # hardware / spot / regions) searched beside the flat-replica grid
+    fleets: Sequence[Any] = ()
     est_processing_s: float = 1.0        # scheduler hint
 
     kind = "plan"
@@ -435,6 +443,15 @@ class PlanSpec:
             object.__setattr__(
                 self, "prefill_decode_splits",
                 tuple(tuple(s) for s in self.prefill_decode_splits))
+        if self.fleets:
+            # keep pools as plain dicts (JSON round-trip); the planner
+            # coerces them into PoolSpec when it builds the grid
+            object.__setattr__(
+                self, "fleets",
+                tuple(tuple(dict(p) if isinstance(p, dict) else p
+                            for p in f) for f in self.fleets))
+        else:
+            object.__setattr__(self, "fleets", ())
 
     def to_dict(self) -> Dict[str, Any]:
         return dict(dataclasses.asdict(self), kind=self.kind)

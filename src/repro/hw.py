@@ -78,12 +78,33 @@ HARDWARE: Dict[str, HardwareModel] = {
 CO2_KG_PER_KWH = 0.475
 
 # Cloud providers offering the chip (paper Fig. 8b uses anonymized labels).
+# Every HARDWARE key has at least one entry so cloud_cost_usd never falls
+# into the silent-zero path for catalog hardware (2080ti has no public
+# cloud SKU; the rate is a render-farm-style hourly equivalent, cpu-xeon
+# mirrors its on-demand board price).
 CLOUD_RATES_USD_PER_HOUR: Dict[str, Dict[str, float]] = {
     "tpu-v5e": {"C1/I1": 1.20, "C1/I2": 0.84},        # on-demand vs 1yr-commit
     "v100":    {"C1/I1": 2.48, "C2/I1": 3.06},
+    "2080ti":  {"C3/I1": 0.56},
     "t4":      {"C1/I3": 0.95, "C2/I3": 0.35},
     "p4":      {"C2/I2": 0.60},
+    "cpu-xeon": {"C1/I4": 0.34, "C2/I4": 0.30},
 }
+
+# Preemptible/spot pricing per chip-hour: the discount a spot pool's
+# replica-seconds are billed at (in exchange for the reclamation risk the
+# cluster simulator's seeded preemption process models).  Ratios follow
+# typical public spot discounts (55–70% off on-demand).
+SPOT_RATES_USD_PER_HOUR: Dict[str, float] = {
+    "tpu-v5e": 0.48,
+    "v100": 0.74,
+    "2080ti": 0.20,
+    "t4": 0.11,
+    "p4": 0.22,
+    "cpu-xeon": 0.10,
+}
+
+PRICING_CLASSES = ("reserved", "spot")
 
 
 def energy_joules(hw: HardwareModel, seconds: float, util: float = 1.0) -> float:
@@ -96,9 +117,34 @@ def co2_kg(joules: float) -> float:
     return joules / 3.6e6 * CO2_KG_PER_KWH
 
 
-def cloud_cost_usd(hw_name: str, seconds: float, instance: str | None = None) -> float:
+def cloud_rate_usd_per_hour(hw_name: str, *, instance: str | None = None,
+                            pricing: str = "reserved") -> float:
+    """$/chip-hour for one hardware key under a pricing class.
+
+    ``pricing="reserved"`` (default) reads the on-demand table — the
+    cheapest listed instance, or the named ``instance``.  ``"spot"``
+    reads the preemptible table (falling back to 30% of on-demand for
+    hardware without a listed spot rate).  Unknown hardware costs 0.0
+    (self-hosted); an unknown *instance* on known hardware is a
+    configuration mistake and raises.
+    """
+    if pricing not in PRICING_CLASSES:
+        raise ValueError(f"unknown pricing class {pricing!r} "
+                         f"(expected one of {PRICING_CLASSES})")
     rates = CLOUD_RATES_USD_PER_HOUR.get(hw_name, {})
     if not rates:
         return 0.0
+    if instance is not None and instance not in rates:
+        raise KeyError(f"no instance {instance!r} offering {hw_name!r} "
+                       f"(known: {sorted(rates)})")
     rate = rates[instance] if instance else min(rates.values())
+    if pricing == "spot":
+        return SPOT_RATES_USD_PER_HOUR.get(hw_name, rate * 0.3)
+    return rate
+
+
+def cloud_cost_usd(hw_name: str, seconds: float, instance: str | None = None,
+                   pricing: str = "reserved") -> float:
+    rate = cloud_rate_usd_per_hour(hw_name, instance=instance,
+                                   pricing=pricing)
     return rate * seconds / 3600.0

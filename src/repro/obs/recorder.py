@@ -49,7 +49,8 @@ class EngineSpan:
     request-level batch occupation), recorded by the ``ReplicaEngine``
     begin/end hooks for the Chrome-trace timeline."""
     replica: int
-    pool: str               # serve | prefill | decode
+    pool: str               # "serve" (flat), "prefill"/"decode"
+                            # (disagg), or the PoolSpec name (fleet)
     start_s: float
     end_s: float
     kind: str               # iteration | batch
@@ -90,7 +91,9 @@ class Timeseries:
     def total(self, gauge: str, *, pool: Optional[str] = None,
               mean: bool = False) -> List[float]:
         """Sum (or mean) of a gauge across replicas, optionally only the
-        replicas of one pool (``prefill`` / ``decode`` / ``serve``)."""
+        replicas of one pool — ``"prefill"``/``"decode"`` for a
+        disaggregated cluster, ``"serve"`` for a flat one, or any
+        named ``PoolSpec`` of a heterogeneous fleet."""
         series = self.gauges.get(gauge, {})
         cols = [v for rid, v in series.items()
                 if pool is None or self.replica_pool.get(rid) == pool]

@@ -3,26 +3,36 @@ the shared discrete-event loop over ``ReplicaEngine`` timelines.
 
 This is the capacity-planning layer the paper's benchmark questions need
 at scale: N model replicas behind a pluggable router (round-robin,
-least-loaded/JSQ, session-affinity) with an optional reactive autoscaler
-that adds replicas under backlog and retires idle ones.  Every replica
-runs the same batching policy (request-level or continuous) against the
-same roofline latency oracle; the event loop owns arrivals, routing,
-closed-loop reissue and the shared clock.
+least-loaded/JSQ, session-affinity, cost-weighted, fastest-TTFT) with an
+optional reactive autoscaler that adds replicas under backlog and
+retires idle ones.  A cluster is either a flat pool of identical
+replicas (``ClusterSpec.replicas``), a prefill/decode split
+(``disaggregation``), or a heterogeneous fleet of typed ``PoolSpec``s —
+each pool with its own hardware, latency oracle, memory budget, pricing
+class (reserved vs. spot, with a seeded reclamation process) and
+optional region.  The event loop owns arrivals, routing, closed-loop
+reissue, spot kills, inter-region forwarding and the shared clock.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Dict, List, Optional, Tuple
 
+from repro import hw as hw_lib
 from repro.obs.recorder import MetricsRecorder
 from repro.obs.spec import ObsSpec
 from repro.serving.batching import (BatchPolicy, ContinuousBatcher,
                                     QueuedRequest)
-from repro.serving.latency_model import LatencyModel, NetworkModel, NETWORKS
+from repro.serving.latency_model import (FittedLatencyModel, LatencyModel,
+                                         NetworkModel, NETWORKS,
+                                         inter_region_network,
+                                         oracle_for_hardware)
 from repro.serving.memory import (KVBudgetError, KVCacheManager, MemorySpec,
                                   ResolvedMemory, oracle_kv_bytes_per_token,
-                                  resolve_memory)
+                                  resolve_memory,
+                                  validate_budget_for_requests)
 from repro.serving.simulator import (EPS, PRE_PROCESS_S, ReplicaEngine,
                                      RequestTrace, SimResult,
                                      clamped_output_tokens)
@@ -80,6 +90,96 @@ class DisaggSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """One homogeneous slice of a heterogeneous fleet.
+
+    A fleet is a list of pools; each pool contributes ``replicas``
+    engines that share one hardware target, latency oracle, memory
+    budget and billing class.  The flat ``ClusterSpec(replicas=N)``
+    cluster is the degenerate one-pool case (and keeps its own code
+    path, byte-identical to the pre-fleet simulator).
+
+    Fields:
+
+    - ``name``: label for routing/observability ("" → ``pool{index}``).
+    - ``hardware``: ``hw.HARDWARE`` catalog key; "" inherits the job's
+      base oracle hardware.  The pool's oracle is the same analytic
+      roofline model re-targeted at this chip (``oracle_for_hardware``),
+      unless ``profile`` supplies calibrated coefficients.
+    - ``replicas``: initial engine count (>= 1).
+    - ``chips``: chips per replica (0 → the base oracle's count).
+    - ``pricing``: ``"reserved"`` (on-demand rates) or ``"spot"``
+      (discounted rates + eligibility for the reclamation process).
+    - ``region``: placement label; requests routed across regions pay
+      the ``inter_region_network`` RTT, and session affinity prefers a
+      session's home region ("" → co-located with the front door).
+    - ``preempt_mtbf_s``: mean seconds between spot reclamations per
+      replica slot (exponential inter-kill times, seeded by
+      ``ClusterSpec.preempt_seed``).  0 disables kills.  Only the
+      pool's *initial* replica slots are tracked; each kill immediately
+      provisions a cold replacement into the same slot.
+    - ``min_replicas`` / ``max_replicas``: per-pool autoscaler bounds
+      (0 → pinned at ``replicas``; any pool with ``min != max`` turns
+      on the per-pool reactive controller).
+    - ``memory``: pool-specific ``MemorySpec`` overriding
+      ``ClusterSpec.memory`` (each pool's budget is resolved against
+      its *own* oracle/HBM).
+    - ``profile``: ``CalibrationProfile`` (dict/path/key) for a fitted
+      per-pool latency oracle instead of the analytic roofline.
+    """
+    name: str = ""
+    hardware: str = ""
+    replicas: int = 1
+    chips: int = 0
+    pricing: str = "reserved"
+    region: str = ""
+    preempt_mtbf_s: float = 0.0
+    min_replicas: int = 0
+    max_replicas: int = 0
+    memory: Optional[MemorySpec] = None
+    profile: Optional[dict] = None
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError("PoolSpec.replicas must be >= 1")
+        if self.chips < 0:
+            raise ValueError("PoolSpec.chips must be >= 0 (0 inherits "
+                             "the base oracle's chip count)")
+        if self.pricing not in hw_lib.PRICING_CLASSES:
+            raise ValueError(f"unknown pricing class {self.pricing!r} "
+                             f"(expected one of {hw_lib.PRICING_CLASSES})")
+        if self.hardware and self.hardware not in hw_lib.HARDWARE:
+            raise ValueError(f"unknown hardware {self.hardware!r} "
+                             f"(known: {sorted(hw_lib.HARDWARE)})")
+        if self.preempt_mtbf_s < 0:
+            raise ValueError("PoolSpec.preempt_mtbf_s must be >= 0")
+        if self.preempt_mtbf_s > 0 and self.pricing != "spot":
+            raise ValueError("preempt_mtbf_s models spot reclamation; "
+                             "set pricing='spot' (reserved capacity is "
+                             "never reclaimed)")
+        if self.min_replicas < 0 or self.max_replicas < 0:
+            raise ValueError("PoolSpec autoscale bounds must be >= 0 "
+                             "(0 pins the pool at its replica count)")
+        lo, hi = self.bounds()
+        if not lo <= self.replicas <= hi:
+            raise ValueError(
+                f"PoolSpec.replicas={self.replicas} outside autoscale "
+                f"bounds [{lo}, {hi}]")
+        if isinstance(self.memory, dict):
+            object.__setattr__(self, "memory",
+                               MemorySpec.from_dict(self.memory))
+
+    def bounds(self) -> Tuple[int, int]:
+        """Effective (min, max) replica bounds (0 → pinned)."""
+        return (self.min_replicas or self.replicas,
+                self.max_replicas or self.replicas)
+
+    @classmethod
+    def from_dict(cls, d) -> "PoolSpec":
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     """Replica-tier configuration (plumbed through BenchmarkJobSpec)."""
     replicas: int = 1
@@ -98,6 +198,10 @@ class ClusterSpec:
     obs: Optional[ObsSpec] = None   # observability layer (time-series +
                                     # timeline); None → fast path, zero
                                     # recording overhead
+    pools: Optional[Tuple[PoolSpec, ...]] = None  # heterogeneous fleet
+                                    # (None → flat identical replicas;
+                                    # when set, ``replicas`` is ignored)
+    preempt_seed: int = 0           # seeds the spot-reclamation schedule
 
     def __post_init__(self):
         if self.replicas < 1 or self.min_replicas < 1:
@@ -120,6 +224,22 @@ class ClusterSpec:
             raise ValueError("disaggregated pools are fixed-size: "
                              "autoscale=True is not supported with "
                              "ClusterSpec.disaggregation")
+        if self.pools is not None:
+            coerced = tuple(
+                PoolSpec.from_dict(p) if isinstance(p, dict) else p
+                for p in self.pools)
+            if not coerced:
+                raise ValueError("ClusterSpec.pools must name at least "
+                                 "one pool when set (None means a flat "
+                                 "cluster)")
+            object.__setattr__(self, "pools", coerced)
+            if self.disaggregation is not None:
+                raise ValueError("pools and disaggregation are mutually "
+                                 "exclusive cluster layouts")
+            if self.autoscale:
+                raise ValueError("fleet pools carry their own min/max_"
+                                 "replicas bounds; leave ClusterSpec."
+                                 "autoscale off")
 
     @classmethod
     def from_dict(cls, d) -> "ClusterSpec":
@@ -190,6 +310,58 @@ class LeastLoadedRouter(Router):
         return best
 
 
+class CostWeightedRouter(Router):
+    """Marginal-cost routing for heterogeneous fleets.
+
+    Picks the replica minimizing ``cost_rate × (load + 1)`` — the
+    $/hour the next request's marginal share of the replica would cost
+    — so work packs onto cheap pools until their backlog makes an
+    expensive replica's idle capacity worth paying for.  Ties (and the
+    flat-cluster case where every ``cost_rate`` is equal or zero) fall
+    back to least-loaded, then lowest ``replica_id``.
+    """
+    name = "cost-weighted"
+
+    def route(self, request, engines, now):
+        best = 0
+        e = engines[0]
+        best_key = (e.cost_rate * (e.load(now) + 1), e.load(now),
+                    e.replica_id)
+        for i in range(1, len(engines)):
+            e = engines[i]
+            load = e.load(now)
+            key = (e.cost_rate * (load + 1), load, e.replica_id)
+            if key < best_key:
+                best, best_key = i, key
+        return best
+
+
+class FastestTTFTRouter(Router):
+    """Latency-aware routing for heterogeneous fleets.
+
+    Picks the replica minimizing ``ttft_hint × (load + 1)`` — the
+    pool's nominal first-token latency scaled by the queue the request
+    would join — so fast hardware absorbs traffic until its backlog
+    erases its speed advantage.  Ties (including flat clusters, where
+    every hint is equal or zero) fall back to least-loaded, then lowest
+    ``replica_id``.
+    """
+    name = "fastest-ttft"
+
+    def route(self, request, engines, now):
+        best = 0
+        e = engines[0]
+        best_key = (e.ttft_hint * (e.load(now) + 1), e.load(now),
+                    e.replica_id)
+        for i in range(1, len(engines)):
+            e = engines[i]
+            load = e.load(now)
+            key = (e.ttft_hint * (load + 1), load, e.replica_id)
+            if key < best_key:
+                best, best_key = i, key
+        return best
+
+
 _MASK64 = (1 << 64) - 1
 
 
@@ -206,6 +378,14 @@ def _rendezvous_weight(session_id: int, replica_id: int) -> int:
     return x ^ (x >> 31)
 
 
+def _kill_gap(seed: int, slot: int, draw: int, mtbf_s: float) -> float:
+    """Exponential spot-reclamation gap, deterministic in
+    (seed, slot, draw) — inverse-CDF over a splitmix64 uniform."""
+    x = _rendezvous_weight(seed * 1000003 + slot + 1, draw)
+    u = (x + 0.5) / float(_MASK64 + 1)      # uniform in (0, 1)
+    return -mtbf_s * math.log(u)
+
+
 class SessionAffinityRouter(Router):
     """Sticky sessions bound to stable ``replica_id``s.
 
@@ -216,11 +396,18 @@ class SessionAffinityRouter(Router):
     *filtered* ready list, so every autoscaler add/retire — or a replica
     merely cold-starting — remapped every session, destroying stickiness
     and the prefix-cache hit rate.
+
+    Multi-region fleets add one preference: a remapped session stays in
+    its recorded home *region* when any replica there is available, so
+    a spot kill inside the region doesn't send the session (and its
+    prefix-cache locality) across a WAN hop.  Region-less clusters see
+    identical behavior (every region label is "").
     """
     name = "affinity"
 
     def __init__(self):
         self._home: Dict[int, int] = {}     # session_id → replica_id
+        self._region: Dict[int, str] = {}   # session_id → home region
 
     def route(self, request, engines, now):
         sid = request.session_id
@@ -229,10 +416,21 @@ class SessionAffinityRouter(Router):
             for i, e in enumerate(engines):
                 if e.replica_id == home:
                     return i
-        idx = max(range(len(engines)),
+        cands = range(len(engines))
+        region = self._region.get(sid)
+        if region:
+            # getattr: routers are duck-typed over engine stand-ins
+            local = [i for i in cands
+                     if getattr(engines[i], "region", "") == region]
+            if local:
+                cands = local
+        idx = max(cands,
                   key=lambda i: _rendezvous_weight(sid,
                                                    engines[i].replica_id))
         self._home[sid] = engines[idx].replica_id
+        home_region = getattr(engines[idx], "region", "")
+        if home_region:
+            self._region[sid] = home_region
         return idx
 
 
@@ -243,6 +441,10 @@ def make_router(name: str) -> Router:
         return LeastLoadedRouter()
     if name in ("affinity", "session", "session-affinity"):
         return SessionAffinityRouter()
+    if name in ("cost-weighted", "cost_weighted", "cost"):
+        return CostWeightedRouter()
+    if name in ("fastest-ttft", "fastest_ttft", "ttft"):
+        return FastestTTFTRouter()
     raise ValueError(f"unknown router {name!r}")
 
 
@@ -282,6 +484,49 @@ class Autoscaler:
                     break
 
 
+# ---- per-pool reactive autoscaler ------------------------------------------
+class FleetAutoscaler:
+    """Per-pool threshold controller for heterogeneous fleets.
+
+    Each pool scales independently between its own ``PoolSpec`` bounds
+    using the cluster-wide thresholds — so a spot overflow pool grows
+    under backlog while the reserved baseline stays pinned.  Shares the
+    flat :class:`Autoscaler`'s signals: mean *queued* per replica to
+    add, mean in-flight per replica to retire an idle one.
+    """
+
+    def __init__(self, spec: ClusterSpec, pools, bounds, make_engine,
+                 pool_of: List[int]):
+        self.spec = spec
+        self.pools = pools
+        self.bounds = bounds            # [(lo, hi)] aligned with pools
+        self.make_engine = make_engine  # (pool_idx, rid, spawn_s, created_s)
+        self.pool_of = pool_of          # replica_id → pool index (shared
+        # with the event loop; appends here keep it aligned with engines)
+
+    def step(self, engines: List[ReplicaEngine], now: float) -> None:
+        live: List[List[ReplicaEngine]] = [[] for _ in self.pools]
+        for e in engines:
+            if not e.retired:
+                live[self.pool_of[e.replica_id]].append(e)
+        for pi, (lo, hi) in enumerate(self.bounds):
+            members = live[pi]
+            n = len(members)
+            queued = sum(len(e.queue) for e in members) / max(n, 1)
+            inflight = sum(e.load(now) for e in members) / max(n, 1)
+            if queued > self.spec.scale_up_load and n < hi:
+                rid = len(engines)
+                engines.append(self.make_engine(
+                    pi, rid, now + self.spec.spawn_delay_s, now))
+                self.pool_of.append(pi)
+            elif inflight < self.spec.scale_down_load and n > lo:
+                for e in reversed(members):
+                    if e.idle(now):
+                        e.retired = True
+                        e.retired_s = now
+                        break
+
+
 # ---- memory grounding ------------------------------------------------------
 def _resolve_cluster_memory(cluster: ClusterSpec, policy: BatchPolicy,
                             latency, requests: List[Request]
@@ -292,32 +537,8 @@ def _resolve_cluster_memory(cluster: ClusterSpec, policy: BatchPolicy,
     if cluster.memory is None:
         return None
     resolved = resolve_memory(cluster.memory, latency)
-    continuous = isinstance(policy, ContinuousBatcher)
-    worst = 0
-    for r in requests:
-        out = r.output_tokens
-        if continuous:
-            if r.prompt_tokens >= resolved.max_model_len:
-                # previously clamped to a 1-token sentinel, silently
-                # validating a sequence the engine would then decode
-                # past the context limit
-                raise KVBudgetError(
-                    f"request {r.req_id}: prompt of {r.prompt_tokens} "
-                    f"tokens leaves no room to decode within "
-                    f"max_model_len={resolved.max_model_len}; raise "
-                    "MemorySpec.max_model_len or shrink the workload's "
-                    "prompts")
-            out = max(1, min(out, resolved.max_model_len - r.prompt_tokens))
-        worst = max(worst, r.prompt_tokens + out)
-    bt = cluster.memory.block_tokens
-    need = -(-worst // bt)
-    if need > resolved.total_blocks:
-        raise KVBudgetError(
-            f"KV budget of {resolved.total_blocks} blocks "
-            f"({resolved.budget_bytes / 1024**3:.2f} GiB at "
-            f"{bt} tok/block) cannot hold one {worst}-token sequence "
-            f"({need} blocks); raise hbm_gb/num_blocks or shrink the "
-            "workload's prompt/output lengths")
+    validate_budget_for_requests(cluster.memory, resolved, requests,
+                                 isinstance(policy, ContinuousBatcher))
     return resolved
 
 
@@ -342,6 +563,16 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
     disaggregation's ``kv_network``, and the decode pool finishes the
     generation with the migrated KV already resident.
 
+    With ``cluster.pools`` set, the fleet is heterogeneous: each
+    ``PoolSpec`` contributes replicas on its own hardware/oracle/memory
+    budget, billed at its pricing class.  Spot pools are subject to a
+    seeded reclamation process (kills requeue in-flight work through
+    the recompute machinery and provision a cold replacement); requests
+    routed to a pool outside the front door's region (the first pool's)
+    pay the ``inter_region_network`` transfer before enqueueing, and
+    ``SimResult.fleet`` carries the per-pool bill plus
+    ``spot_preemptions`` / ``cross_region_fraction``.
+
     ``trace_sample`` < 1 keeps full per-request trace recording (stage
     accounting, per-iteration batch sizes) for only that deterministic
     fraction of requests and drops the rest from ``SimResult.traces``.
@@ -356,6 +587,20 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
             "disaggregated serving needs the continuous batcher "
             f"(got {policy.name!r}): request-level policies have no "
             "decode loop to migrate into")
+    fleet = cluster.pools
+    pool_names: List[str] = []
+    if fleet is not None:
+        if any(p.preempt_mtbf_s > 0 for p in fleet) \
+                and not isinstance(policy, ContinuousBatcher):
+            raise ValueError(
+                "spot preemption requeues in-flight decode work through "
+                "the continuous engine's recompute machinery (got "
+                f"{policy.name!r}); use a continuous policy or set "
+                "preempt_mtbf_s=0")
+        pool_names = [p.name or f"pool{i}" for i, p in enumerate(fleet)]
+        if len(set(pool_names)) != len(pool_names):
+            raise ValueError(f"duplicate pool names in fleet: "
+                             f"{pool_names}")
     if not 0.0 < trace_sample <= 1.0:
         raise ValueError(f"trace_sample must be in (0, 1], got "
                          f"{trace_sample}")
@@ -382,12 +627,47 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         admit(r)
     next_id = len(requests)
 
-    resolved = _resolve_cluster_memory(cluster, policy, latency, requests)
-    # decode is bounded by the model's context limit even when memory is
-    # unmodeled — otherwise output_tokens_max=None workloads run their
-    # 32k-token sentinel far past max_seq_len
-    max_len = resolved.max_model_len if resolved is not None \
-        else getattr(getattr(latency, "cfg", None), "max_seq_len", 0)
+    pool_oracles: List = []
+    pool_mem: List[Tuple[Optional[MemorySpec], Optional[ResolvedMemory]]] \
+        = []
+    if fleet is not None:
+        resolved = None
+        continuous = isinstance(policy, ContinuousBatcher)
+        lens = []
+        for p in fleet:
+            if p.profile is not None:
+                oracle_p = FittedLatencyModel.from_profile(p.profile)
+            else:
+                oracle_p = oracle_for_hardware(latency, p.hardware,
+                                               p.chips)
+            pool_oracles.append(oracle_p)
+            mspec = p.memory if p.memory is not None else cluster.memory
+            res_p = None
+            if mspec is not None:
+                # each pool's budget grounds against its *own* oracle
+                # (HBM, KV bytes/token), and every pool must hold the
+                # workload's worst request — any request can route there
+                res_p = resolve_memory(mspec, oracle_p)
+                validate_budget_for_requests(mspec, res_p, requests,
+                                             continuous)
+                lens.append(res_p.max_model_len)
+            else:
+                ml = getattr(getattr(oracle_p, "cfg", None),
+                             "max_seq_len", 0)
+                if ml:
+                    lens.append(ml)
+            pool_mem.append((mspec, res_p))
+        # spot requeue can move a sequence between pools mid-flight, so
+        # decode is clamped by the tightest pool's context limit
+        max_len = min(lens) if lens else 0
+    else:
+        resolved = _resolve_cluster_memory(cluster, policy, latency,
+                                           requests)
+        # decode is bounded by the model's context limit even when
+        # memory is unmodeled — otherwise output_tokens_max=None
+        # workloads run their 32k-token sentinel far past max_seq_len
+        max_len = resolved.max_model_len if resolved is not None \
+            else getattr(getattr(latency, "cfg", None), "max_seq_len", 0)
     if max_len:
         over = next((r for r in requests if r.prompt_tokens >= max_len),
                     None)
@@ -428,6 +708,37 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
                              kv=_kv(), max_model_len=max_len,
                              created_s=created_s, obs=rec)
 
+    pool_of: List[int] = []         # replica_id → pool index
+    pool_rates: List[float] = []    # $/chip-hour at the pool's pricing
+    pool_chips: List[int] = []
+    if fleet is not None:
+        for pi, p in enumerate(fleet):
+            oracle_p = pool_oracles[pi]
+            pool_rates.append(hw_lib.cloud_rate_usd_per_hour(
+                oracle_p.hw.name, pricing=p.pricing))
+            pool_chips.append(getattr(oracle_p, "chips", 1) or 1)
+
+    def make_fleet_engine(pi: int, rid: int, spawn_s: float = 0.0,
+                          created_s: float = 0.0) -> ReplicaEngine:
+        p = fleet[pi]
+        oracle_p = pool_oracles[pi]
+        mspec, res_p = pool_mem[pi]
+        if rec is not None:
+            rec.register_engine(rid, pool_names[pi])
+        e = ReplicaEngine(
+            rid, policy, oracle_p, spawn_s=spawn_s,
+            kv=KVCacheManager(mspec, res_p) if res_p is not None
+            else None,
+            max_model_len=max_len, created_s=created_s, obs=rec)
+        e.pool_name = pool_names[pi]
+        e.region = p.region
+        e.cost_rate = pool_rates[pi] * pool_chips[pi]
+        # nominal single-stream first-token time on this hardware — the
+        # fastest-ttft router's capability signal (memoized per oracle)
+        e.ttft_hint = oracle_p.prefill_latency(1, 256) \
+            + oracle_p.decode_latency(1, 257)
+        return e
+
     migrations: List[Tuple[float, int, Request]] = []  # (kv_ready, id, r)
     prefill_engines: List[ReplicaEngine] = []
     decode_engines: List[ReplicaEngine] = []
@@ -464,13 +775,52 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
             kv_bpt = resolved.kv_bytes_per_token
         if kv_bpt <= 0:
             kv_bpt = oracle_kv_bytes_per_token(latency)
+    elif fleet is not None:
+        engines = []
+        for pi, p in enumerate(fleet):
+            for _ in range(p.replicas):
+                engines.append(make_fleet_engine(pi, len(engines)))
+                pool_of.append(pi)
+        router = make_router(cluster.router)
     else:
         engines = [make_engine(i) for i in range(max(cluster.replicas, 1))]
         router = make_router(cluster.router)
-    scaler = Autoscaler(cluster, policy, latency, make_engine) \
-        if cluster.autoscale else None
+    if fleet is not None:
+        fbounds = [p.bounds() for p in fleet]
+        scaler = FleetAutoscaler(cluster, fleet, fbounds,
+                                 make_fleet_engine, pool_of) \
+            if any(lo != hi for lo, hi in fbounds) else None
+    else:
+        scaler = Autoscaler(cluster, policy, latency, make_engine) \
+            if cluster.autoscale else None
     next_scale = cluster.scale_interval_s
     peak = len(engines)
+
+    # spot reclamation: one slot per initial spot replica, exponential
+    # inter-kill gaps from a counter-keyed splitmix stream — the same
+    # preempt_seed reproduces the same kill schedule in any process
+    kills: List[Tuple[float, int]] = []
+    slot_engine: List[int] = []     # slot → current replica_id
+    slot_pool: List[int] = []
+    slot_draws: List[int] = []
+    n_kills = 0
+    # inter-region forwarding: a WAN-routed request reaches its target
+    # engine only after the transfer (seq breaks heap ties)
+    forwards: List[Tuple[float, int, int, QueuedRequest]] = []
+    fwd_seq = 0
+    cross_arrivals = routed_arrivals = 0
+    home_region = fleet[0].region if fleet is not None else ""
+    if fleet is not None:
+        for rid, pi in enumerate(pool_of):
+            p = fleet[pi]
+            if p.pricing == "spot" and p.preempt_mtbf_s > 0:
+                slot = len(slot_engine)
+                slot_engine.append(rid)
+                slot_pool.append(pi)
+                slot_draws.append(1)
+                heapq.heappush(kills, (_kill_gap(
+                    cluster.preempt_seed, slot, 0, p.preempt_mtbf_s),
+                    slot))
 
     # ---- indexed event scheduler -----------------------------------------
     # Per-engine next-event times live in a lazy-deletion heap instead of
@@ -511,12 +861,18 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         t_next = arrivals[0][0] if arrivals else inf
         if migrations and migrations[0][0] < t_next:
             t_next = migrations[0][0]
+        if forwards and forwards[0][0] < t_next:
+            t_next = forwards[0][0]
         if eheap and eheap[0][0] < t_next:
             t_next = eheap[0][0]
         if t_next == inf:
             break
         if scaler is not None and next_scale < t_next:
             t_next = next_scale     # only re-evaluate while work remains
+        if kills and kills[0][0] < t_next:
+            t_next = kills[0][0]    # reclamations fire only while work
+            # remains — an idle fleet past the last completion has
+            # nothing observable to lose
         if obs_next_tick < t_next - EPS:
             # state is constant between events: every tick in the open
             # interval (now, t_next) samples it exactly
@@ -524,6 +880,58 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
             obs_next_tick = rec_ticks.next_tick
         if t_next > now:
             now = t_next
+
+        # spot reclamations run before arrivals so this pass's routing
+        # already sees the post-kill fleet
+        if kills and kills[0][0] <= now + EPS:
+            touched_k = set()
+            while kills and kills[0][0] <= now + EPS:
+                _, slot = heapq.heappop(kills)
+                pi = slot_pool[slot]
+                p = fleet[pi]
+                victim = engines[slot_engine[slot]]
+                if not victim.retired:
+                    events += 1
+                    n_kills += 1
+                    work = victim.spot_kill(now, traces)
+                    evers[victim.replica_id] += 1   # stale its entries
+                    # a cold replacement takes over the slot
+                    rid2 = len(engines)
+                    engines.append(make_fleet_engine(
+                        pi, rid2, now + cluster.spawn_delay_s, now))
+                    pool_of.append(pi)
+                    evers.append(0)
+                    slot_engine[slot] = rid2
+                    touched_k.add(rid2)
+                    live = live_engines()
+                    warm = [e for e in live
+                            if e.spawn_s <= now + EPS] or live
+                    for q in work:
+                        e2 = warm[router.route(q.request, warm, now)]
+                        xnet = inter_region_network(victim.region,
+                                                    e2.region)
+                        if xnet is not None:
+                            xfer = xnet.transmit(q.request.payload_bytes)
+                            traces[q.request.req_id].t_transmit += xfer
+                            q.enqueue_s = max(q.enqueue_s, now + xfer)
+                            fwd_seq += 1
+                            heapq.heappush(forwards,
+                                           (now + xfer, fwd_seq,
+                                            e2.replica_id, q))
+                        else:
+                            e2.enqueue(q)
+                            touched_k.add(e2.replica_id)
+                # the slot's next reclamation clocks from when its
+                # replacement comes up, whether or not this kill landed
+                k = slot_draws[slot]
+                slot_draws[slot] += 1
+                heapq.heappush(kills, (
+                    now + cluster.spawn_delay_s + _kill_gap(
+                        cluster.preempt_seed, slot, k,
+                        p.preempt_mtbf_s),
+                    slot))
+            for i in touched_k:
+                schedule(i, now)
 
         if arrivals and arrivals[0][0] <= now + EPS:
             # prefer replicas already past cold start; a still-spawning
@@ -538,10 +946,39 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
                 if rec is not None:
                     rec.count_arrival(r.tenant)
                 e = ready[router.route(r, ready, now)]
+                if fleet is not None:
+                    routed_arrivals += 1
+                    xnet = inter_region_network(home_region, e.region)
+                    if xnet is not None:
+                        # WAN hop: the request reaches its target pool
+                        # after the inter-region transfer
+                        cross_arrivals += 1
+                        xfer = xnet.transmit(r.payload_bytes)
+                        traces[r.req_id].t_transmit += xfer
+                        fwd_seq += 1
+                        heapq.heappush(
+                            forwards,
+                            (t_arr + xfer, fwd_seq, e.replica_id,
+                             QueuedRequest(request=r,
+                                           enqueue_s=t_arr + xfer)))
+                        continue
                 e.enqueue(QueuedRequest(request=r, enqueue_s=t_arr))
                 touched.add(e.replica_id)
             for i in touched:
                 schedule(i, now)
+
+        # cross-region deliveries whose transfer finished join their
+        # target; a target reclaimed mid-flight gets rerouted locally
+        while forwards and forwards[0][0] <= now + EPS:
+            _, _, rid, q = heapq.heappop(forwards)
+            events += 1
+            e = engines[rid]
+            if e.retired:
+                cands = [x for x in live
+                         if x.spawn_s <= now + EPS] or live
+                e = cands[router.route(q.request, cands, now)]
+            e.enqueue(q)
+            schedule(e.replica_id, now)
 
         # KV handoffs whose transfer finished join the decode pool with
         # their cache already resident (first token was already emitted)
@@ -624,6 +1061,47 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
             "mean_kv_transfer_s": (sum(transfers) / len(transfers)
                                    if transfers else 0.0),
         }
+    fleet_info = None
+    if fleet is not None:
+        pools_out = []
+        for pi, p in enumerate(fleet):
+            members = [e for e in engines if pool_of[e.replica_id] == pi]
+            rs = sum(
+                max((e.retired_s if e.retired_s is not None else duration)
+                    - e.created_s, 0.0)
+                for e in members)
+            hw_name = pool_oracles[pi].hw.name
+            d = {
+                "name": pool_names[pi],
+                "hardware": hw_name,
+                "region": p.region,
+                "pricing": p.pricing,
+                "chips": pool_chips[pi],
+                "replicas": len(members),
+                "replica_seconds": rs,
+                "busy_s": sum(e.busy_s for e in members),
+                # integrated replica-seconds billed at the pool's class
+                # (spot capacity pays spot rates — that's the bargain
+                # the reclamation process prices in)
+                "cost_usd": hw_lib.cloud_cost_usd(
+                    hw_name, rs, pricing=p.pricing) * pool_chips[pi],
+            }
+            if pool_mem[pi][1] is not None:
+                stats = [e.kv.stats(duration) for e in members]
+                d["kv_preemptions"] = sum(s["preemptions"]
+                                          for s in stats)
+                d["peak_occupancy"] = max(s["peak_occupancy"]
+                                          for s in stats)
+            pools_out.append(d)
+        fleet_info = {
+            "pools": pools_out,
+            "spot_preemptions": n_kills,
+            "spot_killed_requests": sum(
+                1 for t in traces.values() if t.spot_evictions > 0),
+            "cross_region_fraction": cross_arrivals / routed_arrivals
+            if routed_arrivals else 0.0,
+            "routed_requests": routed_arrivals,
+        }
     memory = None
     if resolved is not None:
         per = [e.kv.stats(duration) for e in engines]
@@ -666,6 +1144,7 @@ def simulate_cluster(workload: WorkloadSpec, policy: BatchPolicy,
         memory=memory,
         replica_seconds=replica_seconds,
         pools=pools,
+        fleet=fleet_info,
         requests_served=served,
         events=events,
         timeseries=timeseries,

@@ -545,3 +545,75 @@ NETWORKS: Dict[str, NetworkModel] = {
     "infiniband": NetworkModel("infiniband", 400e9, 5e-6),
     "nvlink": NetworkModel("nvlink", 7.2e12, 2e-6),
 }
+
+
+# --- multi-region serving (heterogeneous pools with a region tag) -----------
+#: WAN links between serving regions, keyed by unordered region pair.
+#: ``simulate_cluster`` charges the link's transmit time to a request
+#: whenever the router sends it to a pool outside the cluster's
+#: front-door region (the first pool's region).  RTTs follow typical
+#: public inter-region latency matrices; per-flow bandwidth is the
+#: practical WAN share, not the trunk capacity.
+INTER_REGION_NETWORKS: Dict[tuple, NetworkModel] = {
+    ("us-central", "us-east"): NetworkModel("us-central<->us-east",
+                                            25e9, 0.032),
+    ("us-central", "eu-west"): NetworkModel("us-central<->eu-west",
+                                            10e9, 0.105),
+    ("us-east", "eu-west"): NetworkModel("us-east<->eu-west", 12e9, 0.078),
+    ("us-central", "asia-east"): NetworkModel("us-central<->asia-east",
+                                              8e9, 0.140),
+    ("us-east", "asia-east"): NetworkModel("us-east<->asia-east",
+                                           8e9, 0.170),
+    ("eu-west", "asia-east"): NetworkModel("eu-west<->asia-east",
+                                           6e9, 0.210),
+}
+
+#: Fallback link for region pairs not in the table (same order of
+#: magnitude as a cross-continent hop).
+DEFAULT_INTER_REGION = NetworkModel("inter-region", 10e9, 0.080)
+
+
+def inter_region_network(a: str, b: str) -> Optional[NetworkModel]:
+    """The WAN link between regions ``a`` and ``b``, or None when the
+    hop stays inside one region (same name, or either side unset —
+    region-less pools are co-located with the front door)."""
+    if not a or not b or a == b:
+        return None
+    return (INTER_REGION_NETWORKS.get((a, b))
+            or INTER_REGION_NETWORKS.get((b, a))
+            or DEFAULT_INTER_REGION)
+
+
+def oracle_for_hardware(base: LatencyOracle, hardware: str = "",
+                        chips: int = 0) -> LatencyOracle:
+    """Re-target a latency oracle at another hardware catalog entry.
+
+    The per-pool plumbing of heterogeneous clusters: a pool that names
+    its own ``hardware``/``chips`` gets the *same analytic model* served
+    on that chip (fresh roofline terms and latency caches via
+    ``dataclasses.replace``).  When the pool matches the base oracle the
+    base is returned as-is, sharing its memoized latency caches.
+
+    Fitted oracles embed one machine's measured coefficients, so they
+    cannot be re-targeted analytically — pools backed by a
+    :class:`FittedLatencyModel` must supply their own per-hardware
+    profile (``PoolSpec.profile``) instead.
+    """
+    base_hw = getattr(base, "hw", None)
+    base_chips = getattr(base, "chips", 1)
+    hw_name = hardware or (base_hw.name if base_hw is not None else "")
+    n_chips = chips or base_chips
+    if base_hw is not None and hw_name == base_hw.name \
+            and n_chips == base_chips:
+        return base
+    if hw_name not in hw_lib.HARDWARE:
+        raise ValueError(f"unknown hardware {hw_name!r} "
+                         f"(known: {sorted(hw_lib.HARDWARE)})")
+    if not isinstance(base, LatencyModel):
+        raise ValueError(
+            f"cannot re-target a {type(base).__name__} oracle at "
+            f"{hw_name!r}: fitted/measured oracles embed one machine's "
+            "coefficients — give the pool its own calibrated profile "
+            "for that hardware")
+    return dataclasses.replace(base, hw=hw_lib.HARDWARE[hw_name],
+                               chips=n_chips)

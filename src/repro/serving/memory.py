@@ -162,6 +162,40 @@ def resolve_memory(spec: MemorySpec, oracle) -> ResolvedMemory:
                           max_model_len=max_len, budget_bytes=budget)
 
 
+def validate_budget_for_requests(spec: MemorySpec, resolved: ResolvedMemory,
+                                 requests, continuous: bool) -> None:
+    """Reject a grounded budget that cannot hold the workload's largest
+    single request — below that there is no victim to preempt and the
+    sequence could never run.  Shared by the flat cluster path and every
+    pool of a heterogeneous fleet (any request may route to any pool, so
+    each pool's budget must clear the same bar)."""
+    worst = 0
+    for r in requests:
+        out = r.output_tokens
+        if continuous:
+            if r.prompt_tokens >= resolved.max_model_len:
+                # previously clamped to a 1-token sentinel, silently
+                # validating a sequence the engine would then decode
+                # past the context limit
+                raise KVBudgetError(
+                    f"request {r.req_id}: prompt of {r.prompt_tokens} "
+                    f"tokens leaves no room to decode within "
+                    f"max_model_len={resolved.max_model_len}; raise "
+                    "MemorySpec.max_model_len or shrink the workload's "
+                    "prompts")
+            out = max(1, min(out, resolved.max_model_len - r.prompt_tokens))
+        worst = max(worst, r.prompt_tokens + out)
+    bt = spec.block_tokens
+    need = -(-worst // bt)
+    if need > resolved.total_blocks:
+        raise KVBudgetError(
+            f"KV budget of {resolved.total_blocks} blocks "
+            f"({resolved.budget_bytes / 1024**3:.2f} GiB at "
+            f"{bt} tok/block) cannot hold one {worst}-token sequence "
+            f"({need} blocks); raise hbm_gb/num_blocks or shrink the "
+            "workload's prompt/output lengths")
+
+
 @dataclasses.dataclass
 class _Alloc:
     """Blocks one live request references."""

@@ -56,6 +56,9 @@ class RequestTrace:
                                     # (end of prefill); 0 = none emitted
     tokens_out: int = 0             # tokens actually generated (post-clamp)
     preemptions: int = 0            # KV-pressure evict/recompute cycles
+    spot_evictions: int = 0         # times a spot reclamation killed this
+                                    # request's replica mid-decode (subset
+                                    # of preemptions; recompute on rejoin)
     cached_prompt_tokens: int = 0   # prompt tokens served from prefix cache
     detail: bool = True             # False → unsampled (trace_sample < 1):
                                     # engines skip per-iteration stage
@@ -104,6 +107,12 @@ class SimResult:
     pools: Optional[Dict[str, object]] = None    # disaggregated prefill/
                                         # decode pool provenance (None when
                                         # colocated)
+    fleet: Optional[Dict[str, object]] = None    # heterogeneous-pool
+                                        # provenance (ClusterSpec.pools):
+                                        # per-pool hardware/pricing/region
+                                        # splits, spot preemptions, cross-
+                                        # region routing (None for flat
+                                        # identical-replica clusters)
     requests_served: int = 0            # completions including unsampled
                                         # traces (0 → len(traces): full
                                         # recording, the default)
@@ -225,6 +234,36 @@ class SimResult:
                 for t in self.traces)
         return n / len(self.traces)
 
+    def preemption_goodput_loss(self, ttft_slo_s: Optional[float] = None,
+                                tpot_slo_s: Optional[float] = None,
+                                e2e_slo_s: Optional[float] = None) -> float:
+        """Goodput (req/s) lost to spot preemption under the given SLOs.
+
+        Counterfactuals are unobservable, so the loss is estimated as the
+        *excess* SLO-miss rate among preemption-affected requests (those
+        whose replica was spot-killed mid-decode at least once) over the
+        unaffected baseline, scaled by the affected arrival rate.  0.0
+        when no request was spot-killed — including every reserved-only
+        or flat cluster.
+        """
+        if not self.duration_s or not self.traces:
+            return 0.0
+        affected = [t for t in self.traces if t.spot_evictions > 0]
+        if not affected:
+            return 0.0
+        clean = [t for t in self.traces if t.spot_evictions == 0]
+
+        def miss_rate(ts):
+            if not ts:
+                return 0.0
+            n = sum(not self._meets_phase_slos(t, ttft_slo_s, tpot_slo_s,
+                                               e2e_slo_s) for t in ts)
+            return n / len(ts)
+
+        excess = max(miss_rate(affected) - miss_rate(clean), 0.0)
+        return excess * len(affected) * self._sample_scale() \
+            / self.duration_s
+
     def cdf(self, points: int = 50):
         lat = np.sort(self.latencies())
         if not len(lat):
@@ -265,6 +304,16 @@ class SimResult:
         return self.duration_s * max(self.replicas, 1)
 
     def energy_joules(self) -> float:
+        if self.fleet is not None:
+            # heterogeneous pools: each pool's chips draw their own TDP
+            # over that pool's live span at that pool's utilization
+            total = 0.0
+            for p in self.fleet["pools"]:
+                rs = p["replica_seconds"]
+                util = min(p["busy_s"] / rs, 1.0) if rs else 0.0
+                total += hw_lib.energy_joules(
+                    hw_lib.HARDWARE[p["hardware"]], rs, util) * p["chips"]
+            return total
         rs = self.billed_replica_seconds()
         util = min(self.busy_s / rs, 1.0) if rs else 0.0
         return hw_lib.energy_joules(self.hw, rs, util) * self.chips
@@ -273,6 +322,11 @@ class SimResult:
         return hw_lib.co2_kg(self.energy_joules())
 
     def cost_usd(self) -> float:
+        if self.fleet is not None:
+            # per-pool bill: each pool's integrated replica-seconds at
+            # its own hardware's rate and pricing class (spot pools are
+            # billed spot rates only up to each replica's kill time)
+            return sum(p["cost_usd"] for p in self.fleet["pools"])
         return hw_lib.cloud_cost_usd(self.hw.name,
                                      self.billed_replica_seconds()) \
             * self.chips
@@ -321,6 +375,10 @@ class SimResult:
             s["prefill_replicas"] = self.pools["prefill_replicas"]
             s["decode_replicas"] = self.pools["decode_replicas"]
             s["mean_kv_transfer_s"] = self.pools["mean_kv_transfer_s"]
+        if self.fleet is not None:
+            s["spot_preemptions"] = self.fleet["spot_preemptions"]
+            s["spot_killed_requests"] = self.fleet["spot_killed_requests"]
+            s["cross_region_fraction"] = self.fleet["cross_region_fraction"]
         if self.memory is not None:
             s["prefix_hit_rate"] = self.memory["prefix_hit_rate"]
             s["preemptions"] = self.memory["preemptions"]
@@ -395,6 +453,12 @@ class ReplicaEngine:
         self.chunk_tokens = chunk_tokens    # 0 → whole-prompt prefill
         self.created_s = created_s          # provisioning time (billing)
         self.retired_s: Optional[float] = None
+        # fleet routing metadata — defaults describe the flat cluster;
+        # simulate_cluster overwrites these for heterogeneous pools
+        self.pool_name = "serve"
+        self.region = ""
+        self.cost_rate = 0.0    # $/replica-hour (rate × chips), router hint
+        self.ttft_hint = 0.0    # nominal first-token latency, router hint
         # continuous admission pops head / preempts back to head: deque.
         # Request-level policies slice the queue (queue[:n]), so they
         # keep a list.
@@ -554,6 +618,47 @@ class ReplicaEngine:
             tr.t_inference += now - victim.join_s
         q.enqueue_s = now
         self.queue.appendleft(q)
+
+    def spot_kill(self, now: float, traces) -> List[QueuedRequest]:
+        """Spot reclamation: the provider takes the replica back *now*.
+
+        Every in-flight sequence loses its KV and rejoins the fleet via
+        the cluster router carrying its progress (recompute on rejoin,
+        same machinery as memory-pressure preemption); queued requests
+        are handed back untouched.  Returns the work to re-route.  The
+        engine is retired and bills only up to ``now`` — the partially
+        run iteration never completes, so its unspent tail is refunded
+        from ``busy_s``.
+        """
+        victims: List[QueuedRequest] = []
+        if self.iter_end is not None and self.iter_end > now:
+            self.busy_s -= self.iter_end - now
+        self.iter_end = None
+        for a in self.active:
+            q = a.qreq
+            if self.kv is not None:
+                self.kv.free(q.request.req_id, now, preempted=True)
+            if self.obs is not None:
+                self.obs.count_preemption()
+            q.remaining = a.remaining
+            q.recompute_tokens = a.context
+            q.preemptions += 1
+            tr = a.trace
+            tr.preemptions += 1
+            tr.spot_evictions += 1
+            if tr.detail:
+                tr.t_inference += now - a.join_s
+            q.enqueue_s = now
+            victims.append(q)
+        self.active = []
+        # queued work was never started: keep its original enqueue_s so
+        # queue-time accounting spans the whole wait
+        victims.extend(self.queue)
+        self.queue.clear()
+        self.server_free_at = now
+        self.retired = True
+        self.retired_s = now
+        return victims
 
     def _grow_or_preempt(self, still: List[_ActiveRequest], now: float,
                          traces) -> List[_ActiveRequest]:

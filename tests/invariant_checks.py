@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from repro.configs import get_config
 from repro.serving.batching import ContinuousBatcher, make_policy
-from repro.serving.cluster import ClusterSpec, simulate_cluster
+from repro.serving.cluster import ClusterSpec, PoolSpec, simulate_cluster
 from repro.serving.latency_model import LatencyModel
 from repro.serving.simulator import SimResult
 from repro.serving.workload import CLOSED, WorkloadSpec, generate
@@ -35,6 +35,25 @@ def run_sim(workload: WorkloadSpec, policy_name: str, *,
         cluster=ClusterSpec(replicas=replicas, router=router,
                             autoscale=autoscale, memory=memory,
                             disaggregation=disaggregation))
+
+
+def run_fleet_sim(workload: WorkloadSpec, *, mtbf_s: float, seed: int = 0,
+                  router: str = "least-loaded", base_replicas: int = 1,
+                  spot_replicas: int = 1, spot_hardware: str = "t4",
+                  max_batch: int = 8, memory=None) -> SimResult:
+    """A reserved pool plus a spot pool under seeded preemption kills."""
+    policy = make_policy("continuous", max_batch=max_batch,
+                         max_prefill=max(max_batch // 2, 1))
+    pools = (
+        PoolSpec(name="base", replicas=base_replicas),
+        PoolSpec(name="spot", hardware=spot_hardware,
+                 replicas=spot_replicas, pricing="spot",
+                 preempt_mtbf_s=mtbf_s),
+    )
+    return simulate_cluster(
+        workload, policy, latency_model(),
+        cluster=ClusterSpec(pools=pools, router=router, memory=memory,
+                            preempt_seed=seed))
 
 
 def policy_cap(policy_name: str, **policy_kw) -> int:
@@ -150,6 +169,31 @@ def check_event_budget(res: SimResult) -> None:
     assert 0 < res.events <= bound, (
         f"{res.events} loop events for {n} requests / {tokens} tokens / "
         f"{pre} preemptions (budget {bound}) — the scheduler is spinning")
+
+
+def check_drain_under_kills(workload: WorkloadSpec, res: SimResult) -> None:
+    """Spot kills drain to zero: every admitted request still completes
+    exactly once, eviction accounting is self-consistent, and the fleet
+    breakdown covers every replica-second that was billed."""
+    check_all_complete_exactly_once(workload, res)
+    fleet = res.fleet
+    assert fleet is not None, "fleet run produced no fleet accounting"
+    killed = sum(1 for t in res.traces if t.spot_evictions > 0)
+    assert fleet["spot_killed_requests"] == killed
+    assert fleet["spot_preemptions"] >= 0
+    if fleet["spot_preemptions"] == 0:
+        assert killed == 0, "evicted traces but zero recorded kills"
+    for t in res.traces:
+        assert t.spot_evictions <= t.preemptions, (
+            "spot evictions must be a subset of total preemptions")
+        assert t.done_s > 0
+    for p in fleet["pools"]:
+        assert p["replica_seconds"] >= -1e-9
+        assert p["busy_s"] <= p["replica_seconds"] + 1e-6, (
+            f"pool {p['name']} busy {p['busy_s']} exceeds its "
+            f"replica-seconds {p['replica_seconds']}")
+        assert p["cost_usd"] >= 0.0
+    assert abs(sum(p["busy_s"] for p in fleet["pools"]) - res.busy_s) < 1e-6
 
 
 def check_token_results_match(res_a: SimResult, res_b: SimResult) -> None:

@@ -1,0 +1,302 @@
+"""Heterogeneous pools, spot preemption, and multi-region serving.
+
+The tentpole claims: a single-pool fleet is indistinguishable from the
+flat cluster it replaces, hardware-aware routers favor cheap/fast
+pools, spot pools bill spot rates and their kills never lose requests
+(the concrete twin of
+``test_simulator_invariants.test_drain_to_zero_under_spot_kills``),
+cross-region hops pay RTT and are accounted, and the planner can
+recommend a mixed/spot-backed fleet on ``cost_per_goodput``.
+"""
+import dataclasses
+
+import pytest
+
+from repro import hw
+from repro.calibrate.planner import plan_capacity, simulate_candidate
+from repro.configs import get_config
+from repro.serving.batching import make_policy
+from repro.serving.cluster import (ClusterSpec, PoolSpec, make_router,
+                                   simulate_cluster)
+from repro.serving.latency_model import (LatencyModel,
+                                         oracle_for_hardware)
+from repro.serving.workload import WorkloadSpec
+
+from invariant_checks import (check_busy_bound, check_drain_under_kills,
+                              check_duration_covers_window,
+                              check_event_budget, run_fleet_sim)
+
+
+@pytest.fixture(scope="module")
+def lat():
+    return LatencyModel(get_config("gemma2-2b"), chips=4)
+
+
+def _wl(**kw):
+    base = dict(rate=120, duration_s=2, prompt_tokens=128,
+                output_tokens=4, output_tokens_max=16, seed=3)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+def _continuous():
+    return make_policy("continuous", max_batch=16, max_prefill=8)
+
+
+class TestPoolSpecValidation:
+    def test_rejects_zero_replicas(self):
+        with pytest.raises(ValueError):
+            PoolSpec(replicas=0)
+
+    def test_rejects_unknown_hardware(self):
+        with pytest.raises(ValueError):
+            PoolSpec(hardware="quantum-annealer")
+
+    def test_rejects_unknown_pricing(self):
+        with pytest.raises(ValueError):
+            PoolSpec(pricing="preemptible")
+
+    def test_rejects_preemption_on_reserved_pool(self):
+        with pytest.raises(ValueError):
+            PoolSpec(pricing="reserved", preempt_mtbf_s=30.0)
+
+    def test_rejects_bounds_excluding_replicas(self):
+        with pytest.raises(ValueError):
+            PoolSpec(replicas=4, min_replicas=1, max_replicas=2)
+
+    def test_bounds_default_to_static(self):
+        assert PoolSpec(replicas=3).bounds() == (3, 3)
+        assert PoolSpec(replicas=3, min_replicas=1,
+                        max_replicas=5).bounds() == (1, 5)
+
+    def test_cluster_rejects_pools_plus_disagg_or_autoscale(self):
+        pools = (PoolSpec(replicas=1),)
+        with pytest.raises(ValueError):
+            ClusterSpec(pools=pools, autoscale=True)
+        with pytest.raises(ValueError):
+            ClusterSpec(pools=())
+
+    def test_cluster_coerces_pool_dicts(self):
+        c = ClusterSpec(pools=({"name": "a", "replicas": 2},))
+        assert isinstance(c.pools[0], PoolSpec)
+        assert c.pools[0].replicas == 2
+
+
+class TestSinglePoolEquivalence:
+    def test_one_pool_fleet_matches_flat_cluster(self, lat):
+        """A fleet of one reserved base-hardware pool must serve exactly
+        what the flat cluster serves — same traces, same summary."""
+        wl = _wl()
+        flat = simulate_cluster(wl, _continuous(), lat,
+                                cluster=ClusterSpec(replicas=2,
+                                                    router="least-loaded"))
+        fleet = simulate_cluster(
+            wl, _continuous(), lat,
+            cluster=ClusterSpec(pools=(PoolSpec(name="serve", replicas=2),),
+                                router="least-loaded"))
+        flat_tr = sorted(dataclasses.astuple(t) for t in flat.traces)
+        fleet_tr = sorted(dataclasses.astuple(t) for t in fleet.traces)
+        assert flat_tr == fleet_tr
+        fs, ss = flat.summary(), fleet.summary()
+        for k in fs:
+            assert fs[k] == pytest.approx(ss[k]), f"summary[{k}] diverged"
+
+    def test_one_pool_fleet_reports_fleet_block(self, lat):
+        res = simulate_cluster(
+            _wl(), _continuous(), lat,
+            cluster=ClusterSpec(pools=(PoolSpec(replicas=2),)))
+        assert res.fleet is not None
+        assert len(res.fleet["pools"]) == 1
+        assert res.fleet["spot_preemptions"] == 0
+        assert res.fleet["cross_region_fraction"] == 0.0
+
+
+class TestHardwareAwareRouting:
+    def test_cost_weighted_prefers_cheap_pool(self, lat):
+        """At low load the cost-weighted router should send most traffic
+        to the cheaper t4 pool."""
+        res = simulate_cluster(
+            _wl(rate=60), _continuous(), lat,
+            cluster=ClusterSpec(pools=(
+                PoolSpec(name="v5e", replicas=2),
+                PoolSpec(name="t4", hardware="t4", replicas=2)),
+                router="cost-weighted"))
+        by_pool = {p["name"]: p for p in res.fleet["pools"]}
+        assert by_pool["t4"]["busy_s"] > by_pool["v5e"]["busy_s"]
+
+    def test_fastest_ttft_prefers_fast_pool(self, lat):
+        """The fastest-TTFT router should keep traffic on the v5e pool
+        even though the t4 pool is cheaper."""
+        res = simulate_cluster(
+            _wl(rate=60), _continuous(), lat,
+            cluster=ClusterSpec(pools=(
+                PoolSpec(name="v5e", replicas=2),
+                PoolSpec(name="t4", hardware="t4", replicas=2)),
+                router="fastest-ttft"))
+        by_pool = {p["name"]: p for p in res.fleet["pools"]}
+        assert by_pool["v5e"]["busy_s"] > by_pool["t4"]["busy_s"]
+
+    def test_router_aliases(self):
+        for alias in ("cost-weighted", "cost_weighted", "cost"):
+            assert make_router(alias).name == "cost-weighted"
+        for alias in ("fastest-ttft", "fastest_ttft", "ttft"):
+            assert make_router(alias).name == "fastest-ttft"
+
+    def test_oracle_retarget(self, lat):
+        t4 = oracle_for_hardware(lat, "t4")
+        assert t4.hw.name == "t4"
+        assert oracle_for_hardware(lat) is lat
+        # t4 is slower than v5e at equal batch/seq
+        assert t4.prefill_latency(1, 256) > lat.prefill_latency(1, 256)
+
+
+class TestSpotPreemption:
+    def test_drain_under_kills_concrete(self):
+        """Concrete twin of the hypothesis drain-to-zero property."""
+        for seed in (0, 7):
+            wl = _wl(duration_s=1.0, seed=seed)
+            res = run_fleet_sim(wl, mtbf_s=0.3, seed=seed)
+            check_drain_under_kills(wl, res)
+            check_busy_bound(res)
+            check_duration_covers_window(wl, res)
+            check_event_budget(res)
+
+    def test_kills_actually_fire_and_are_counted(self):
+        res = run_fleet_sim(_wl(duration_s=1.0), mtbf_s=0.2, seed=0)
+        assert res.fleet["spot_preemptions"] > 0
+        assert res.fleet["spot_killed_requests"] > 0
+        assert any(t.spot_evictions > 0 for t in res.traces)
+
+    def test_spot_bills_below_reserved(self, lat):
+        wl = _wl()
+        def run(pricing, mtbf):
+            return simulate_cluster(
+                wl, _continuous(), lat,
+                cluster=ClusterSpec(pools=(
+                    PoolSpec(name="p", replicas=2, pricing=pricing,
+                             preempt_mtbf_s=mtbf),),
+                    router="least-loaded"))
+        reserved = run("reserved", 0.0)
+        spot = run("spot", 1e9)  # spot rates, no kills in the window
+        assert spot.cost_usd() < reserved.cost_usd()
+        ratio = spot.cost_usd() / reserved.cost_usd()
+        expect = (hw.cloud_rate_usd_per_hour("tpu-v5e", pricing="spot")
+                  / hw.cloud_rate_usd_per_hour("tpu-v5e"))
+        assert ratio == pytest.approx(expect, rel=1e-6)
+
+    def test_spot_requires_continuous_batching(self, lat):
+        with pytest.raises(ValueError):
+            simulate_cluster(
+                _wl(), make_policy("tfs", max_batch=8, timeout_s=0.004),
+                lat,
+                cluster=ClusterSpec(pools=(
+                    PoolSpec(replicas=1, pricing="spot",
+                             preempt_mtbf_s=1.0),)))
+
+    def test_goodput_loss_bounded_by_goodput(self):
+        res = run_fleet_sim(_wl(duration_s=1.0), mtbf_s=0.3, seed=1)
+        loss = res.preemption_goodput_loss(e2e_slo_s=0.05)
+        gp = res.goodput(e2e_slo_s=0.05)
+        assert 0.0 <= loss
+        assert loss <= gp + res.fleet["spot_killed_requests"] / res.duration_s
+
+
+class TestMultiRegion:
+    def _two_region(self, lat, wl, router="cost-weighted"):
+        return simulate_cluster(
+            wl, _continuous(), lat,
+            cluster=ClusterSpec(pools=(
+                PoolSpec(name="us", replicas=1, region="us-east"),
+                PoolSpec(name="eu", hardware="t4", replicas=2,
+                         region="eu-west")),
+                router=router))
+
+    def test_cross_region_fraction_accounted(self, lat):
+        res = self._two_region(lat, _wl(rate=60))
+        frac = res.fleet["cross_region_fraction"]
+        assert 0.0 < frac <= 1.0
+        # the cheap pool is overseas, so cost-weighted routing crosses
+        assert frac > 0.5
+
+    def test_cross_region_hops_pay_rtt(self, lat):
+        """Requests served overseas carry strictly more transmit time
+        than the same workload served single-region."""
+        wl = _wl(rate=60)
+        two = self._two_region(lat, wl)
+        one = simulate_cluster(
+            wl, _continuous(), lat,
+            cluster=ClusterSpec(pools=(
+                PoolSpec(name="us", replicas=1, region="us-east"),
+                PoolSpec(name="us2", hardware="t4", replicas=2,
+                         region="us-east")),
+                router="cost-weighted"))
+        t_two = sum(t.t_transmit for t in two.traces)
+        t_one = sum(t.t_transmit for t in one.traces)
+        assert t_two > t_one
+        assert one.fleet["cross_region_fraction"] == 0.0
+
+    def test_regionless_pools_are_colocated(self, lat):
+        res = simulate_cluster(
+            _wl(rate=60), _continuous(), lat,
+            cluster=ClusterSpec(pools=(
+                PoolSpec(name="a", replicas=1),
+                PoolSpec(name="b", hardware="t4", replicas=1)),
+                router="round-robin"))
+        assert res.fleet["cross_region_fraction"] == 0.0
+
+
+class TestPerPoolAutoscale:
+    def test_spot_pool_scales_within_bounds(self, lat):
+        res = simulate_cluster(
+            _wl(kind="burst", rate=300, burst_factor=8.0, duration_s=2),
+            _continuous(), lat,
+            cluster=ClusterSpec(pools=(
+                PoolSpec(name="base", replicas=1),
+                PoolSpec(name="flex", replicas=1, min_replicas=1,
+                         max_replicas=3)),
+                router="least-loaded"))
+        flex = next(p for p in res.fleet["pools"] if p["name"] == "flex")
+        base = next(p for p in res.fleet["pools"] if p["name"] == "base")
+        assert base["replicas"] == 1
+        assert 1 <= flex["replicas"] <= 3
+
+
+class TestFleetPlanning:
+    def test_planner_recommends_spot_fleet(self, lat):
+        wl = _wl(duration_s=3, seed=21, output_tokens=8,
+                 output_tokens_max=32)
+        mixed = ({"name": "v5e", "replicas": 2},
+                 {"name": "t4", "hardware": "t4", "replicas": 2})
+        spot = ({"name": "v5e", "replicas": 2},
+                {"name": "t4", "hardware": "t4", "replicas": 2,
+                 "pricing": "spot", "preempt_mtbf_s": 2.0})
+        plan = plan_capacity(
+            lat, wl, slo_latency_s=0.4, slo_target=0.9,
+            replicas=(3,), policies=("continuous",),
+            routers=("cost-weighted",), objective="cost_per_goodput",
+            fleets=(mixed, spot))
+        best = plan.best
+        assert best is not None and best.fleet is not None
+        assert any(p["pricing"] == "spot" for p in best.fleet)
+        flat = [c for c in plan.candidates if c.fleet is None]
+        assert all(best.objective <= c.objective for c in flat
+                   if c.meets_slo)
+        # winner survives independent re-simulation
+        res = simulate_candidate(lat, wl, best)
+        assert res.slo_attainment(0.4) >= 0.9
+        assert res.fleet is not None
+
+    def test_plan_candidate_fleet_round_trips(self, lat):
+        """PlanCandidate.fleet is plain dicts (JSON-able) and rebuilds
+        the same ClusterSpec."""
+        spot = ({"name": "v5e", "replicas": 1},
+                {"name": "t4", "hardware": "t4", "replicas": 1,
+                 "pricing": "spot", "preempt_mtbf_s": 5.0})
+        plan = plan_capacity(
+            lat, _wl(duration_s=1), slo_latency_s=0.5, slo_target=0.5,
+            replicas=(), policies=("continuous",),
+            routers=("cost-weighted",), fleets=(spot,))
+        (cand,) = plan.candidates
+        assert all(isinstance(p, dict) for p in cand.fleet)
+        c = ClusterSpec(pools=cand.fleet, router=cand.router)
+        assert all(isinstance(p, PoolSpec) for p in c.pools)

@@ -1,0 +1,60 @@
+"""Cloud-rate catalog coverage: every hardware key must price, with and
+without a named instance, under both pricing classes.
+
+Regression test for the gap where ``CLOUD_RATES_USD_PER_HOUR`` had no
+entries for ``2080ti``/``cpu-xeon`` and ``cloud_cost_usd(...,
+instance=...)`` KeyError'd on catalog hardware.
+"""
+import pytest
+
+from repro import hw
+
+
+class TestCloudRateCoverage:
+    def test_every_hardware_key_has_listed_rates(self):
+        for name in hw.HARDWARE:
+            assert hw.CLOUD_RATES_USD_PER_HOUR.get(name), \
+                f"{name} missing from CLOUD_RATES_USD_PER_HOUR"
+
+    def test_every_key_resolves_without_instance(self):
+        for name in hw.HARDWARE:
+            cost = hw.cloud_cost_usd(name, 3600.0)
+            assert cost > 0.0, f"{name} priced at zero"
+            # default instance is the cheapest listed one
+            rates = hw.CLOUD_RATES_USD_PER_HOUR[name]
+            assert cost == pytest.approx(min(rates.values()))
+
+    def test_every_key_resolves_with_every_listed_instance(self):
+        for name in hw.HARDWARE:
+            for inst, rate in hw.CLOUD_RATES_USD_PER_HOUR[name].items():
+                cost = hw.cloud_cost_usd(name, 3600.0, instance=inst)
+                assert cost == pytest.approx(rate)
+
+    def test_unknown_instance_on_known_hardware_raises(self):
+        with pytest.raises(KeyError):
+            hw.cloud_cost_usd("tpu-v5e", 3600.0, instance="nope/I9")
+
+    def test_unknown_hardware_is_self_hosted_zero(self):
+        assert hw.cloud_cost_usd("my-basement-rig", 3600.0) == 0.0
+
+
+class TestSpotPricing:
+    def test_every_key_has_a_spot_rate_below_reserved(self):
+        for name in hw.HARDWARE:
+            spot = hw.cloud_rate_usd_per_hour(name, pricing="spot")
+            reserved = hw.cloud_rate_usd_per_hour(name)
+            assert 0.0 < spot < reserved, \
+                f"{name}: spot {spot} not below reserved {reserved}"
+
+    def test_spot_cost_scales_with_seconds(self):
+        one_hr = hw.cloud_cost_usd("t4", 3600.0, pricing="spot")
+        half_hr = hw.cloud_cost_usd("t4", 1800.0, pricing="spot")
+        assert one_hr == pytest.approx(2 * half_hr)
+        assert one_hr == pytest.approx(hw.SPOT_RATES_USD_PER_HOUR["t4"])
+
+    def test_unknown_pricing_class_raises(self):
+        with pytest.raises(ValueError):
+            hw.cloud_rate_usd_per_hour("t4", pricing="preemptible")
+
+    def test_pricing_classes_constant(self):
+        assert hw.PRICING_CLASSES == ("reserved", "spot")

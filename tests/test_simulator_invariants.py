@@ -22,11 +22,12 @@ from repro.serving.workload import WorkloadSpec
 
 from invariant_checks import (check_all_complete_exactly_once,
                               check_busy_bound, check_closed_concurrency,
+                              check_drain_under_kills,
                               check_duration_covers_window,
                               check_event_budget, check_memory_invariants,
                               check_stage_sanity,
                               check_token_results_match, policy_cap,
-                              run_sim)
+                              run_fleet_sim, run_sim)
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -194,3 +195,22 @@ def test_prefix_cache_transparent_to_results(wl, max_batch, block_tokens,
     check_token_results_match(runs[0], runs[1])
     for res in runs:
         check_memory_invariants(res)
+
+
+# ---- heterogeneous fleet / spot preemption ---------------------------------
+@given(wl=open_workloads(), mtbf=st.floats(0.05, 5.0),
+       seed=st.integers(0, 2**16), max_batch=st.integers(1, 8),
+       router=st.sampled_from(["round-robin", "least-loaded",
+                               "cost-weighted", "fastest-ttft"]))
+@settings(**SETTINGS)
+def test_drain_to_zero_under_spot_kills(wl, mtbf, seed, max_batch, router):
+    """Seeded spot kills mid-decode never lose requests: everything the
+    workload admits drains to completion through requeue/recompute, and
+    the fleet's eviction/billing accounting stays self-consistent.
+    Concrete twin: test_fleet.py::TestDrainUnderKills."""
+    res = run_fleet_sim(wl, mtbf_s=mtbf, seed=seed, router=router,
+                        max_batch=max_batch)
+    check_drain_under_kills(wl, res)
+    check_busy_bound(res)
+    check_duration_covers_window(wl, res)
+    check_event_budget(res)
